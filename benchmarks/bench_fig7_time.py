@@ -1,0 +1,46 @@
+"""Paper Fig. 7: topology-aware compressor runtime comparison.
+
+TopoSZp vs the TopoIter baseline (the TopoSZ/TopoA stand-in: iterative
+global correction with persistence-style passes).  The paper reports
+100x-10000x compression and 10x-500x decompression speedups for TopoSZp;
+the derived column carries the measured speedup factors.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_grid, emit, timeit
+from repro.core.baselines import (topo_iter_compress, topo_iter_decompress)
+from repro.core.toposzp import toposzp_compress, toposzp_decompress
+from repro.data.fields import gaussian_random_field, vortex_field
+
+EB = 1e-3
+FIELDS = ["AEROD", "CLDHGH", "CLDLOW", "FLDSC", "CLDMED"]   # ATM fields
+
+
+def run():
+    ny, nx = bench_grid("CLIMATE")
+    for i, field_name in enumerate(FIELDS):
+        gen = gaussian_random_field if i % 2 == 0 else vortex_field
+        f = jnp.asarray(gen(ny, nx, seed=10 + i))
+
+        comp = toposzp_compress(f, EB)
+        t_fast_c = timeit(lambda: toposzp_compress(f, EB))
+        t_fast_d = timeit(lambda: toposzp_decompress(comp, (ny, nx), EB))
+
+        t_slow_c = timeit(lambda: topo_iter_compress(f, EB, max_iters=6),
+                          warmup=0, iters=1)
+        slow_comp = topo_iter_compress(f, EB, max_iters=6)
+        t_slow_d = timeit(lambda: topo_iter_decompress(slow_comp, (ny, nx),
+                                                       EB), warmup=0, iters=1)
+
+        emit(f"fig7/{field_name}/toposzp_compress", t_fast_c * 1e6,
+             f"speedup_vs_topoiter={t_slow_c / t_fast_c:.0f}x")
+        emit(f"fig7/{field_name}/toposzp_decompress", t_fast_d * 1e6,
+             f"speedup_vs_topoiter={t_slow_d / t_fast_d:.0f}x")
+        emit(f"fig7/{field_name}/topoiter_compress", t_slow_c * 1e6, "")
+        emit(f"fig7/{field_name}/topoiter_decompress", t_slow_d * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig. 8: bit rate vs false cases (FN / FP / FT / total).
+
+Sweeps the error bound to trace the rate-distortion curve for TopoSZp,
+SZp, SZ-Lorenzo2D and ZFP-like on every dataset.  Emits one row per
+(dataset, compressor, eb): derived = bitrate + false-case counts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_grid, emit, timeit
+from repro.core import false_cases_host, szp_compress, szp_decompress
+from repro.core.baselines import (sz_lorenzo2d_compress,
+                                  sz_lorenzo2d_decompress, zfp_like_compress,
+                                  zfp_like_decompress)
+from repro.core.toposzp import toposzp_compress, toposzp_decompress
+from repro.data.fields import multiscale_field
+
+EBS = [1e-2, 1e-3, 1e-4]
+
+
+def run():
+    for ds in ("CLIMATE", "ICE", "LAND"):
+        ny, nx = bench_grid(ds)
+        f = jnp.asarray(multiscale_field(ny, nx, seed=21))
+        n = f.size
+        for eb in EBS:
+            rows = {}
+            comp = toposzp_compress(f, eb)
+            rec = toposzp_decompress(comp, (ny, nx), eb)
+            rows["toposzp"] = (int(comp.nbytes), rec)
+
+            parts = szp_compress(f, eb)
+            rows["szp"] = (int(parts.nbytes),
+                           szp_decompress(parts, (ny, nx), eb))
+
+            c = sz_lorenzo2d_compress(f, eb)
+            rows["sz_lorenzo"] = (int(c.nbytes),
+                                  sz_lorenzo2d_decompress(c, (ny, nx), eb))
+
+            z = zfp_like_compress(f, eb)
+            rows["zfp_like"] = (int(z.nbytes),
+                                zfp_like_decompress(z, (ny, nx), eb))
+
+            for name, (nbytes, r) in rows.items():
+                fc = false_cases_host(f, r)
+                bitrate = 8.0 * nbytes / n
+                emit(f"fig8/{ds}/{name}/eb{eb:.0e}", bitrate * 1000,
+                     f"bitrate={bitrate:.3f};FN={fc['FN']};FP={fc['FP']};"
+                     f"FT={fc['FT']};total={fc['total']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Table I: compression-time scalability + the eps_topo <= 2 eps bound.
+
+The paper scales OpenMP threads 1->18 on fixed grids; the TPU-native analog
+is data-parallel sharding, which on this 1-core CPU container we surface as
+throughput over the same datasets plus the measured eps_topo.  Emits one CSV
+row per dataset: name, us_per_call(compress), derived = "MB/s=..,ratio=..,
+eps_topo=..".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_grid, emit, timeit
+from repro.core import max_abs_error
+from repro.core.toposzp import toposzp_compress, toposzp_decompress
+from repro.data.fields import gaussian_random_field
+
+EB = 1e-3
+
+
+def run():
+    for name in ("ATM", "CLIMATE", "ICE", "LAND", "OCEAN"):
+        ny, nx = bench_grid(name)
+        f = jnp.asarray(gaussian_random_field(ny, nx, seed=7))
+        comp = toposzp_compress(f, EB)             # compile
+        t_c = timeit(lambda: toposzp_compress(f, EB))
+        rec = toposzp_decompress(comp, (ny, nx), EB)
+        t_d = timeit(lambda: toposzp_decompress(comp, (ny, nx), EB))
+        mb = f.size * 4 / 1e6
+        eps_topo = float(max_abs_error(f, rec))
+        ratio = f.size * 4 / int(comp.nbytes)
+        emit(f"table1/{name}/compress", t_c * 1e6,
+             f"MB/s={mb / t_c:.1f};ratio={ratio:.2f};"
+             f"eps_topo={eps_topo:.2e};bound2eb={2 * EB:.0e}")
+        emit(f"table1/{name}/decompress", t_d * 1e6,
+             f"MB/s={mb / t_d:.1f}")
+
+
+if __name__ == "__main__":
+    run()

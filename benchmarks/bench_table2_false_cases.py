@@ -1,0 +1,56 @@
+"""Paper Table II: average FN/FP/FT per dataset x error bound x compressor.
+
+Validates the paper's three claims at fixed error bounds:
+  * TopoSZp: FP = 0 and FT = 0 everywhere,
+  * TopoSZp: 3x-100x fewer FN than the non-topology-aware compressors,
+  * ZFP-like transform coders produce nonzero FP (not monotone).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_grid, emit
+from repro.core import false_cases_host, szp_compress, szp_decompress
+from repro.core.baselines import (sz_lorenzo2d_compress,
+                                  sz_lorenzo2d_decompress, zfp_like_compress,
+                                  zfp_like_decompress)
+from repro.core.toposzp import toposzp_compress, toposzp_decompress
+from repro.data.fields import make_dataset
+
+EBS = [1e-3, 1e-4, 1e-5]
+DATASETS = ("ATM", "CLIMATE", "ICE", "LAND", "OCEAN")
+
+
+def _roundtrip(name, f, eb):
+    ny, nx = f.shape
+    if name == "toposzp":
+        c = toposzp_compress(f, eb)
+        return toposzp_decompress(c, (ny, nx), eb)
+    if name == "szp":
+        return szp_decompress(szp_compress(f, eb), (ny, nx), eb)
+    if name == "sz_lorenzo":
+        return sz_lorenzo2d_decompress(sz_lorenzo2d_compress(f, eb),
+                                       (ny, nx), eb)
+    return zfp_like_decompress(zfp_like_compress(f, eb), (ny, nx), eb)
+
+
+def run():
+    for ds in DATASETS:
+        ny, nx = bench_grid(ds)
+        fields = [jnp.asarray(f[:ny, :nx])
+                  for f in make_dataset(ds, n_fields=2, seed=5)]
+        for eb in EBS:
+            for comp in ("toposzp", "szp", "sz_lorenzo", "zfp_like"):
+                tot = {"FN": 0, "FP": 0, "FT": 0}
+                for f in fields:
+                    fc = false_cases_host(f, _roundtrip(comp, f, eb))
+                    for k in tot:
+                        tot[k] += fc[k]
+                avg = {k: v / len(fields) for k, v in tot.items()}
+                emit(f"table2/{ds}/{comp}/eb{eb:.0e}", avg["FN"],
+                     f"FN={avg['FN']:.1f};FP={avg['FP']:.1f};"
+                     f"FT={avg['FT']:.1f}")
+
+
+if __name__ == "__main__":
+    run()

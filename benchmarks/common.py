@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: timing, CSV emission, dataset sizing."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# benchmark-scale knob: FULL=1 uses the paper's grid sizes (ATM 1800x3600);
+# default runs reduced grids so the suite finishes quickly on 1 CPU core.
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+REDUCED = {
+    "ATM": (450, 900),
+    "CLIMATE": (384, 576),
+    "ICE": (384, 320),
+    "LAND": (192, 288),
+    "OCEAN": (384, 320),
+}
+
+
+def bench_grid(name: str):
+    from repro.data.fields import DATASETS
+    return DATASETS[name] if FULL else REDUCED[name]
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time of a blocking call (jit warm)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Set REPRO_BENCH_FULL=1 for the paper's full grid sizes (slow on CPU).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_fig7_time, bench_fig8_rate_distortion,
+                            bench_grad_compress, bench_table1_scalability,
+                            bench_table2_false_cases)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_table1_scalability, bench_fig7_time,
+                bench_fig8_rate_distortion, bench_table2_false_cases,
+                bench_grad_compress):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

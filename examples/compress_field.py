@@ -1,0 +1,55 @@
+"""Rate-distortion + topology sweep over CESM-like datasets, writing the
+real on-disk byte format.
+
+    PYTHONPATH=src python examples/compress_field.py [--dataset LAND]
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import false_cases_host, max_abs_error
+from repro.core import io as cio
+from repro.core.toposzp import toposzp_compress, toposzp_decompress
+from repro.data.fields import make_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="LAND",
+                    choices=["ATM", "CLIMATE", "ICE", "LAND", "OCEAN"])
+    ap.add_argument("--out", default=None, help="write .tszp blobs here")
+    args = ap.parse_args()
+
+    fields = make_dataset(args.dataset, n_fields=3, seed=11)
+    print(f"dataset {args.dataset}: {len(fields)} fields of "
+          f"{fields[0].shape}")
+    print(f"{'eb':>8} {'bitrate':>8} {'ratio':>7} {'max_err':>9} "
+          f"{'FN':>6} {'FP':>3} {'FT':>3}")
+
+    for eb in (1e-2, 1e-3, 1e-4):
+        tot_bytes = tot_fn = tot_fp = tot_ft = 0
+        max_err = 0.0
+        for i, f in enumerate(fields):
+            fj = jnp.asarray(f)
+            comp = toposzp_compress(fj, eb)
+            blob = cio.serialize_toposzp(comp, f.shape, eb)
+            if args.out:
+                import os
+                os.makedirs(args.out, exist_ok=True)
+                with open(f"{args.out}/{args.dataset}_{i}_eb{eb:.0e}.tszp",
+                          "wb") as fh:
+                    fh.write(blob)
+            comp2, shape, eb2, block = cio.deserialize_toposzp(blob)
+            rec = toposzp_decompress(comp2, shape, eb2, block=block)
+            fc = false_cases_host(fj, rec)
+            tot_bytes += len(blob)
+            tot_fn += fc["FN"]; tot_fp += fc["FP"]; tot_ft += fc["FT"]
+            max_err = max(max_err, float(max_abs_error(fj, rec)))
+        n = sum(f.size for f in fields)
+        print(f"{eb:8.0e} {8 * tot_bytes / n:8.3f} {4 * n / tot_bytes:7.2f} "
+              f"{max_err:9.2e} {tot_fn:6d} {tot_fp:3d} {tot_ft:3d}"
+              f"   (bound 2eb={2 * eb:.0e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: compress a scientific field with topology guarantees.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (false_cases_host, max_abs_error, szp_roundtrip,
+                        toposzp_roundtrip)
+from repro.data.fields import vortex_field
+
+
+def main():
+    eb = 1e-3
+    field = jnp.asarray(vortex_field(256, 320, n_vortices=60, seed=42))
+    print(f"field: {field.shape}, raw {field.size * 4 / 1e6:.2f} MB, "
+          f"error bound eps={eb}")
+
+    # plain SZp: fast, error-bounded, but drops critical points (FN)
+    rec_szp, parts = szp_roundtrip(field, eb)
+    fc = false_cases_host(field, rec_szp)
+    print(f"\nSZp     : ratio {field.size * 4 / int(parts.nbytes):5.2f}  "
+          f"max_err {float(max_abs_error(field, rec_szp)):.2e}  "
+          f"FN={fc['FN']} FP={fc['FP']} FT={fc['FT']}")
+
+    # TopoSZp: same substrate + CD/RP metadata + stencil/RBF restoration
+    rec, comp = toposzp_roundtrip(field, eb)
+    fc2 = false_cases_host(field, rec)
+    print(f"TopoSZp : ratio {field.size * 4 / int(comp.nbytes):5.2f}  "
+          f"max_err {float(max_abs_error(field, rec)):.2e}  "
+          f"FN={fc2['FN']} FP={fc2['FP']} FT={fc2['FT']}")
+
+    print(f"\nFN reduction: {fc['FN']}/{max(fc2['FN'], 1)} = "
+          f"{fc['FN'] / max(fc2['FN'], 1):.1f}x fewer missing critical "
+          f"points; FP=FT=0 by construction; |err| <= 2 eps strictly.")
+
+
+if __name__ == "__main__":
+    main()

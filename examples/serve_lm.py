@@ -1,0 +1,45 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2_2b --steps 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, registry
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke_config(args.arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.steps)
+
+    rng = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    batch = {"tokens": prompts}
+
+    t0 = time.perf_counter()
+    tokens = engine.generate(batch, steps=args.steps)
+    jax.block_until_ready(tokens)
+    dt = time.perf_counter() - t0
+    total_new = args.batch * args.steps
+    print(f"[serve] {args.arch} (smoke config): generated "
+          f"{tokens.shape} tokens in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s incl. compile)")
+    for i in range(min(args.batch, 2)):
+        print(f"  request {i}: {tokens[i, :12].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

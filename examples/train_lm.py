@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~100M-param MiniCPM-family model for a few
+hundred steps with fault-tolerant checkpointing (and optional compressed
+gradient all-reduce on a multi-device host).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import token_batches
+from repro.models import lm, registry
+from repro.optim import adamw, wsd
+from repro.train import init_state, make_train_step, train_loop
+
+
+def build_100m_cfg():
+    """~100M-param llama-like config (MiniCPM family, WSD schedule)."""
+    return registry.get_config("minicpm_2b").replace(
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=8, head_dim=64,
+        d_ff=2048, vocab_size=8192, attn_chunk=256, loss_chunk=128,
+        remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--tiny", action="store_true",
+                    help="~4M params for very fast CPU demo")
+    args = ap.parse_args()
+
+    cfg = build_100m_cfg()
+    if args.tiny:
+        cfg = registry.get_smoke_config("minicpm_2b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n = lm.param_count(params)
+    print(f"[train_lm] {cfg.name}-family model: {n / 1e6:.1f}M params")
+
+    optimizer = adamw(wsd(args.lr, warmup=args.steps // 10,
+                          stable=args.steps // 2, decay=args.steps // 2 + 1))
+    state = init_state(params, optimizer, grad_compress=False)
+    step_fn = make_train_step(cfg, optimizer)
+
+    data = ({k: jnp.asarray(v) for k, v in b.items()}
+            for b in token_batches(cfg, args.batch, args.seq, seed=0))
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ck_")
+    state, report = train_loop(state, step_fn, data, num_steps=args.steps,
+                               ckpt_dir=ckpt_dir, ckpt_every=100,
+                               log_every=25)
+    import numpy as np
+    print(f"[train_lm] loss {np.mean(report.losses[:10]):.4f} -> "
+          f"{np.mean(report.losses[-10:]):.4f} "
+          f"({report.steps_run} steps, ckpts at {report.checkpoints})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.ckpt.manager import save, restore, latest_step, prune
+
+__all__ = ["save", "restore", "latest_step", "prune"]

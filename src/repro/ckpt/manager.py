@@ -1,0 +1,146 @@
+"""Fault-tolerant checkpoint manager with optional SZp compression.
+
+Layout per checkpoint:  <dir>/step_<N>/
+    manifest.json   — tree structure, shapes, dtypes, per-blob sha256, mode
+    data.bin        — concatenated per-leaf blobs
+
+Writes are atomic (tmp dir + os.replace) and verified by content hash on
+restore; a corrupt/partial checkpoint is skipped and the previous one is
+used — the restart path the training loop exercises (tests simulate a
+mid-run preemption).
+
+Modes per-leaf:
+  * 'raw'  — exact bytes (default for ints / small tensors / exact restart)
+  * 'szp'  — error-bounded SZp stream for float arrays (space saver for
+             non-critical state; error bound recorded in the manifest)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import io as cio
+from repro.core.szp import szp_compress, szp_decompress
+
+_MANIFEST = "manifest.json"
+_DATA = "data.bin"
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save(tree, step: int, directory: str, compress: Optional[str] = None,
+         eb: float = 1e-4) -> str:
+    """Write an atomic checkpoint; returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    names, leaves, _ = _flatten_with_names(tree)
+    entries = []
+    blobs = []
+    offset = 0
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(leaf)
+        mode = "raw"
+        if (compress == "szp" and arr.dtype in (np.float32,)
+                and arr.size >= 4096):
+            parts = szp_compress(jnp.asarray(arr).reshape(-1), eb)
+            blob = cio.serialize_szp(parts, (1, arr.size), eb)
+            mode = "szp"
+        else:
+            blob = arr.tobytes()
+        blobs.append(blob)
+        entries.append({
+            "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "mode": mode, "offset": offset, "nbytes": len(blob),
+            "sha256": hashlib.sha256(blob).hexdigest(), "eb": eb,
+        })
+        offset += len(blob)
+
+    with open(os.path.join(tmp, _DATA), "wb") as f:
+        for b in blobs:
+            f.write(b)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump({"step": step, "entries": entries}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _load_one(path: str, tree_template) -> Tuple[Any, int]:
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = open(os.path.join(path, _DATA), "rb").read()
+    names, leaves, treedef = _flatten_with_names(tree_template)
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    out = []
+    for name, leaf in zip(names, leaves):
+        e = by_name[name]
+        blob = data[e["offset"]: e["offset"] + e["nbytes"]]
+        if hashlib.sha256(blob).hexdigest() != e["sha256"]:
+            raise IOError(f"checkpoint blob hash mismatch for {name}")
+        if e["mode"] == "szp":
+            parts, shape, eb, block = cio.deserialize_szp(blob)
+            arr = np.asarray(szp_decompress(parts, (1, shape[1]), eb,
+                                            block=block)).reshape(e["shape"])
+            arr = arr.astype(e["dtype"])
+        else:
+            arr = np.frombuffer(blob, dtype=np.dtype(e["dtype"])).reshape(
+                e["shape"]).copy()
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, tree_template) -> Optional[Tuple[Any, int]]:
+    """Load the newest valid checkpoint (falling back past corrupt ones)."""
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(directory)
+                    if d.startswith("step_") and not d.endswith(".tmp")),
+                   reverse=True)
+    for s in steps:
+        path = os.path.join(directory, f"step_{s:08d}")
+        try:
+            return _load_one(path, tree_template)
+        except Exception:   # corrupt / partial: try the previous one
+            continue
+    return None
+
+
+def prune(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

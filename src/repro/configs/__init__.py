@@ -1,0 +1,6 @@
+"""Per-architecture configs (one module per assigned arch) + shape registry."""
+from repro.configs.base import (ArchConfig, ShapeConfig, SHAPES,
+                                LONG_CONTEXT_ARCHS, runnable_cells)
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "LONG_CONTEXT_ARCHS",
+           "runnable_cells"]

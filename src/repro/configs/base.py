@@ -1,0 +1,126 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture gets one ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (exact published sizes) and ``smoke_config()`` (reduced same-family
+config for CPU tests).  Shapes are the four assigned input regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    # layer pattern, cycled through the depth; entries:
+    #   'global' | 'local' (windowed) | 'recurrent' (RG-LRU) | 'rwkv'
+    layer_pattern: Tuple[str, ...] = ("global",)
+    window_size: int = 4096
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    rope_theta_local: Optional[float] = None
+    act: str = "swiglu"               # swiglu | geglu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scale_embed: bool = False         # gemma multiplies embed by sqrt(d)
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    dense_residual: bool = False      # arctic: dense FFN parallel to MoE
+    capacity_factor: float = 1.25
+    renormalize_router: bool = True
+    router_aux_weight: float = 0.01
+    moe_dense_ff: int = 0             # hidden of the parallel dense FFN
+    # recurrent
+    rnn_width: int = 0                # RG-LRU width (0 -> d_model)
+    rwkv_head_dim: int = 64
+    rwkv_lora: int = 32
+    # frontend stubs
+    frontend: Optional[str] = None    # audio_frames | vision_patches
+    num_prefix_embeds: int = 0        # vlm: patch embeddings prepended
+    # numerics / parallelism
+    param_dtype: jnp.dtype = jnp.bfloat16
+    activation_dtype: jnp.dtype = jnp.bfloat16
+    attn_chunk: int = 1024
+    loss_chunk: int = 512
+    fsdp: bool = False                # shard params over the data axis too
+    remat: bool = True                # checkpoint each layer group
+    # §Perf strategy knobs (hillclimbed in EXPERIMENTS.md)
+    moe_impl: str = "einsum"          # einsum (GSPMD) | shard_map (manual EP)
+    sharding_strategy: str = "tp"     # tp | fsdp (pure-DP activations,
+                                      #   fully sharded params/optimizer)
+    rwkv_impl: str = "scan"           # scan | chunked (matmul-form WKV)
+    grad_compress: bool = False       # hZCCL-style quantized DP all-reduce
+    # costing mode (roofline): scans counted once by XLA cost analysis, so
+    # the dry-run lowers small-depth UNROLLED variants and extrapolates.
+    unroll_groups: bool = False
+    unroll_loss: bool = False
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_rnn_width(self) -> int:
+        return self.rnn_width or self.d_model
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 for clean model-axis sharding."""
+        v = self.vocab_size
+        return -(-v // 256) * 256
+
+    def pattern_layers(self) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+        """(scanned groups x pattern, unrolled tail) covering num_layers."""
+        p = self.layer_pattern
+        n_groups, tail = divmod(self.num_layers, len(p))
+        return tuple(p for _ in range(n_groups)), tuple(p[:tail])
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str          # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing; DESIGN.md
+# §long_500k applicability documents the skips)
+LONG_CONTEXT_ARCHS = ("rwkv6_3b", "recurrentgemma_2b")
+
+
+def runnable_cells(arch_names):
+    """All (arch, shape) cells honoring the documented long_500k skips."""
+    cells = []
+    for a in arch_names:
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG_CONTEXT_ARCHS:
+                continue
+            cells.append((a, s))
+    return cells

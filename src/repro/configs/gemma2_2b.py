@@ -1,0 +1,30 @@
+"""Gemma-2 2B [arXiv:2408.00118; hf] — alternating local:global attention,
+logit soft-capping.  26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2_2b",
+    family="dense",
+    num_layers=26,          # 13 x (local, global)
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    layer_pattern=("local", "global"),
+    window_size=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    act="geglu",
+    scale_embed=True,
+    tie_embeddings=True,
+    source="arXiv:2408.00118; hf google/gemma-2-2b",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=4, d_model=64, num_heads=4,
+                          num_kv_heads=2, head_dim=16, d_ff=128,
+                          vocab_size=128, window_size=16, attn_chunk=16,
+                          loss_chunk=16, remat=False)

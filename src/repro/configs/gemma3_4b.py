@@ -1,0 +1,32 @@
+"""Gemma-3 4B [hf:google/gemma-3-*-pt; unverified] — 5:1 local:global
+attention, qk-norm, dual RoPE theta.  34L d_model=2560 8H (GQA kv=4)
+d_ff=10240 vocab=262144."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3_4b",
+    family="dense",
+    num_layers=34,          # 5 x (5 local + 1 global) + 4 local tail
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    layer_pattern=("local", "local", "local", "local", "local", "global"),
+    window_size=1024,
+    qk_norm=True,
+    rope_theta=1e6,          # global layers
+    rope_theta_local=1e4,    # local layers
+    act="geglu",
+    scale_embed=True,
+    tie_embeddings=True,
+    source="hf google/gemma-3-1b-pt family (unverified tier)",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=7, d_model=64, num_heads=4,
+                          num_kv_heads=2, head_dim=16, d_ff=128,
+                          vocab_size=128, window_size=16, attn_chunk=16,
+                          loss_chunk=16, remat=False)

@@ -1,0 +1,33 @@
+"""InternVL2-76B [arXiv:2404.16821; unverified] — InternViT + LLM backbone.
+The assignment specifies the transformer BACKBONE (llama-3-70B-like):
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+
+The InternViT vision frontend is a STUB per the assignment: input_specs()
+provides 256 precomputed patch embeddings prepended to the token stream."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2_76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    layer_pattern=("global",),
+    act="swiglu",
+    frontend="vision_patches",
+    num_prefix_embeds=256,
+    fsdp=True,               # 76B params: shard weights over data axis too
+    source="arXiv:2404.16821 (unverified tier)",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                          num_kv_heads=2, head_dim=16, d_ff=128,
+                          vocab_size=128, num_prefix_embeds=8,
+                          attn_chunk=32, loss_chunk=16, fsdp=False,
+                          remat=False)

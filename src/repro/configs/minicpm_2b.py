@@ -1,0 +1,27 @@
+"""MiniCPM-2B [arXiv:2404.06395; hf] — llama-like dense with WSD schedule.
+40L d_model=2304 36H (kv=36) d_ff=5760 vocab=122753 (padded to 122880)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm_2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    head_dim=64,
+    d_ff=5760,
+    vocab_size=122753,
+    layer_pattern=("global",),
+    act="swiglu",
+    tie_embeddings=True,    # MiniCPM ties input/output embeddings
+    sharding_strategy="fsdp",    # §Perf: train-only FSDP (5.8x, minicpm cell)
+    source="arXiv:2404.06395; hf openbmb/MiniCPM-2B (WSD schedule in optim/)",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                          num_kv_heads=4, head_dim=16, d_ff=128,
+                          vocab_size=128, attn_chunk=32, loss_chunk=16,
+                          remat=False)

@@ -1,0 +1,31 @@
+"""MusicGen-medium [arXiv:2306.05284; hf] — decoder-only transformer over
+EnCodec tokens.  48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048.
+
+The EnCodec frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings (B, S, d_model); labels are codebook ids."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen_medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    layer_pattern=("global",),
+    act="gelu",
+    frontend="audio_frames",
+    sharding_strategy="fsdp",    # §Perf: train-only FSDP (5.8x, minicpm cell)
+    source="arXiv:2306.05284; hf facebook/musicgen-medium "
+           "(RoPE used in place of sinusoidal positions — noted deviation)",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                          num_kv_heads=4, head_dim=16, d_ff=128,
+                          vocab_size=64, attn_chunk=32, loss_chunk=16,
+                          remat=False)

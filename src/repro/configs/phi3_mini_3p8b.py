@@ -1,0 +1,25 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219] — dense RoPE SwiGLU.
+32L d_model=3072 32H (kv=32) d_ff=8192 vocab=32064."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3_mini_3p8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    layer_pattern=("global",),
+    act="swiglu",
+    source="arXiv:2404.14219 (unverified tier)",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                          num_kv_heads=4, head_dim=16, d_ff=128,
+                          vocab_size=128, attn_chunk=32, loss_chunk=16,
+                          remat=False)

@@ -1,0 +1,30 @@
+"""RecurrentGemma-2B (Griffin) [arXiv:2402.19427; hf] — RG-LRU + local
+attention, pattern (recurrent, recurrent, local).  26L d_model=2560 10H
+(MQA kv=1) d_ff=7680 vocab=256000."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma_2b",
+    family="hybrid",
+    num_layers=26,          # 8 x (rec, rec, local) + (rec, rec) tail
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,         # MQA
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    layer_pattern=("recurrent", "recurrent", "local"),
+    window_size=2048,
+    rnn_width=2560,
+    act="geglu",
+    scale_embed=True,
+    tie_embeddings=True,
+    source="arXiv:2402.19427 (Griffin); hf google/recurrentgemma-2b",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=4, d_model=64, num_heads=4,
+                          num_kv_heads=1, head_dim=16, d_ff=128,
+                          vocab_size=128, rnn_width=64, window_size=16,
+                          attn_chunk=16, loss_chunk=16, remat=False)

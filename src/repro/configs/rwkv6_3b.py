@@ -1,0 +1,29 @@
+"""RWKV-6 "Finch" 3B [arXiv:2404.05892; hf] — attention-free, data-dependent
+decay.  32L d_model=2560 d_ff=8960 vocab=65536, head size 64."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6_3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,           # 2560 / head size 64
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+    layer_pattern=("rwkv",),
+    rwkv_head_dim=64,
+    rwkv_lora=32,
+    act="relu",             # channel-mix uses squared relu internally
+    rwkv_impl="chunked",    # §Perf: matmul-form WKV (13.5x w/ fsdp)
+    sharding_strategy="fsdp",   # §Perf: train-only FSDP
+    source="arXiv:2404.05892 (Finch); hf RWKV/rwkv-6-world-3b",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                          num_kv_heads=4, head_dim=16, rwkv_head_dim=16,
+                          rwkv_lora=8, d_ff=128, vocab_size=128,
+                          attn_chunk=32, loss_chunk=16, remat=False)

@@ -1,0 +1,21 @@
+"""TopoSZp core: the paper's contribution as composable JAX modules."""
+from repro.core.quantize import quantize, dequantize, quantize_roundtrip
+from repro.core.critical_points import (classify, REGULAR, MINIMA, SADDLE,
+                                        MAXIMA)
+from repro.core.szp import (szp_compress, szp_decompress, szp_roundtrip,
+                            SZpParts, DEFAULT_BLOCK)
+from repro.core.toposzp import (toposzp_compress, toposzp_decompress,
+                                toposzp_roundtrip, TopoSZpCompressed)
+from repro.core.metrics import (false_cases, false_cases_host, psnr,
+                                max_abs_error, bitrate, compression_ratio)
+
+__all__ = [
+    "quantize", "dequantize", "quantize_roundtrip",
+    "classify", "REGULAR", "MINIMA", "SADDLE", "MAXIMA",
+    "szp_compress", "szp_decompress", "szp_roundtrip", "SZpParts",
+    "DEFAULT_BLOCK",
+    "toposzp_compress", "toposzp_decompress", "toposzp_roundtrip",
+    "TopoSZpCompressed",
+    "false_cases", "false_cases_host", "psnr", "max_abs_error", "bitrate",
+    "compression_ratio",
+]

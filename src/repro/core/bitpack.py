@@ -1,0 +1,135 @@
+"""Fixed-length byte encoding (SZp "BE" stage) — static-shape JAX bit packing.
+
+SZp stores, per block of K values, the per-block bit width w_b needed for the
+largest |delta| in the block, then packs the magnitudes of all K deltas at
+w_b bits each into a contiguous byte stream.  On CPU SZp emits this stream
+serially; here the packing is fully parallel:
+
+  * per-block byte counts  nb_b = ceil(K * w_b / 8)
+  * byte offsets by exclusive prefix sum
+  * every *output byte* is produced independently by gathering the (<= 8)
+    value bits it covers (searchsorted maps byte -> block)
+
+Unpacking reads, for each value, the <= 5 bytes its bit-window spans and
+reassembles the magnitude with 32-bit shifts.  Both directions are jit-able
+with static capacities; the dynamic quantity is the valid byte count.
+
+This mirrors the on-disk format byte-for-byte (see core/io.py), the buffers
+are simply over-allocated to the static worst case.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.utils import exclusive_cumsum
+
+MAX_WIDTH = 32
+
+
+def block_nbytes(widths: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-block packed byte count for K values at widths bits each."""
+    return (k * widths + 7) // 8
+
+
+def pack_blocks(mags: jnp.ndarray, widths: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pack per-block magnitudes at per-block bit widths.
+
+    Args:
+      mags:   (B, K) uint32/int32 magnitudes, each < 2**widths[b].
+      widths: (B,) int32 in [0, 32].
+
+    Returns:
+      buf:    (cap,) uint8 packed stream (valid prefix only), cap = B*ceil(K*32/8)
+      offs:   (B,) int32 exclusive byte offsets per block
+      total:  () int32 total valid bytes
+    """
+    mags = mags.astype(jnp.uint32)
+    b_blocks, k = mags.shape
+    nb = block_nbytes(widths, k)                       # (B,)
+    offs = exclusive_cumsum(nb)                        # (B,)
+    total = offs[-1] + nb[-1] if b_blocks > 0 else jnp.int32(0)
+    cap = b_blocks * ((k * MAX_WIDTH + 7) // 8)
+
+    j = jnp.arange(cap, dtype=jnp.int32)               # output byte index
+    blk = jnp.searchsorted(offs, j, side="right") - 1  # block covering byte j
+    blk = jnp.clip(blk, 0, b_blocks - 1)
+    jb = j - offs[blk]                                 # byte index inside block
+    w = widths[blk]                                    # (cap,)
+
+    # bit positions covered by this byte inside the block's bit stream
+    t = jb[:, None] * 8 + jnp.arange(8, dtype=jnp.int32)[None, :]   # (cap, 8)
+    w_safe = jnp.maximum(w, 1)[:, None]
+    i = jnp.minimum(t // w_safe, k - 1)                # value index
+    bit_in_val = t % w_safe
+    vals = mags[blk[:, None], i]                       # (cap, 8) gather
+    bits = (vals >> bit_in_val.astype(jnp.uint32)) & jnp.uint32(1)
+    # mask out bits past the block's bit stream or in zero-width blocks
+    valid_bit = (t < (k * w)[:, None]) & (w[:, None] > 0)
+    bits = jnp.where(valid_bit, bits, jnp.uint32(0))
+    byte = (bits << jnp.arange(8, dtype=jnp.uint32)[None, :]).sum(axis=1)
+    byte = jnp.where(j < total, byte, jnp.uint32(0))
+    return byte.astype(jnp.uint8), offs, total.astype(jnp.int32)
+
+
+def unpack_blocks(buf: jnp.ndarray, widths: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_blocks` -> (B, K) uint32 magnitudes."""
+    b_blocks = widths.shape[0]
+    nb = block_nbytes(widths, k)
+    offs = exclusive_cumsum(nb)
+
+    w = widths[:, None]                                 # (B, 1)
+    i = jnp.arange(k, dtype=jnp.int32)[None, :]         # (1, K)
+    s = i * w                                           # bit start inside block
+    byte0 = offs[:, None] + s // 8                      # absolute first byte
+    sh = (s % 8).astype(jnp.uint32)
+
+    cap = buf.shape[0]
+    idx = byte0[:, :, None] + jnp.arange(5, dtype=jnp.int32)[None, None, :]
+    idx = jnp.clip(idx, 0, cap - 1)
+    bts = buf[idx].astype(jnp.uint32)                   # (B, K, 5)
+
+    lo = bts[..., 0] | (bts[..., 1] << 8) | (bts[..., 2] << 16) | (bts[..., 3] << 24)
+    hi = bts[..., 4]
+    # value = (lo >> sh) | (hi << (32 - sh)), guarding the sh == 0 case
+    # (shifting a uint32 by 32 is undefined in XLA).
+    up = jnp.where(sh == 0, jnp.uint32(0), hi << (jnp.uint32(32) - sh))
+    val = (lo >> sh) | up
+    # mask to w bits; w == 32 keeps everything, w == 0 yields 0.
+    wq = w.astype(jnp.uint32)
+    mask = jnp.where(
+        wq >= 32, jnp.uint32(0xFFFFFFFF),
+        (jnp.uint32(1) << jnp.where(wq >= 32, jnp.uint32(0), wq)) - jnp.uint32(1))
+    val = val & mask
+    return jnp.where(w > 0, val, jnp.uint32(0))
+
+
+# ---- fixed-width helpers (sign bits, 2-bit label maps) ---------------------
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a flat {0,1} array into uint8 bytes (little-endian bit order)."""
+    n = bits.shape[0]
+    pad = (-n) % 8
+    b = jnp.pad(bits.astype(jnp.uint32), (0, pad)).reshape(-1, 8)
+    return (b << jnp.arange(8, dtype=jnp.uint32)[None, :]).sum(axis=1).astype(jnp.uint8)
+
+
+def unpack_bits(buf: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`; returns (n,) uint8 of {0,1}."""
+    bits = (buf[:, None].astype(jnp.uint32) >> jnp.arange(8, dtype=jnp.uint32)[None, :]) & 1
+    return bits.reshape(-1)[:n].astype(jnp.uint8)
+
+
+def pack_2bit(vals: jnp.ndarray) -> jnp.ndarray:
+    """Pack a flat array of 2-bit codes (0..3) into bytes, 4 per byte."""
+    n = vals.shape[0]
+    pad = (-n) % 4
+    v = jnp.pad(vals.astype(jnp.uint32), (0, pad)).reshape(-1, 4)
+    return (v << (2 * jnp.arange(4, dtype=jnp.uint32))[None, :]).sum(axis=1).astype(jnp.uint8)
+
+
+def unpack_2bit(buf: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_2bit`; returns (n,) int32 codes in 0..3."""
+    v = (buf[:, None].astype(jnp.uint32) >> (2 * jnp.arange(4, dtype=jnp.uint32))[None, :]) & 3
+    return v.reshape(-1)[:n].astype(jnp.int32)

@@ -1,0 +1,54 @@
+"""Evaluation metrics (paper Sec. V): FN/FP/FT counts, PSNR, bitrate, ratio."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.critical_points import REGULAR, classify
+
+
+@jax.jit
+def false_cases(orig: jnp.ndarray, recon: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Topological error counts between original and reconstructed fields.
+
+    FN: true critical point became regular.
+    FP: regular point became critical.
+    FT: critical point changed critical type (m/s/M flip).
+    """
+    lo = classify(orig)
+    lr = classify(recon)
+    fn = (lo != REGULAR) & (lr == REGULAR)
+    fp = (lo == REGULAR) & (lr != REGULAR)
+    ft = (lo != REGULAR) & (lr != REGULAR) & (lo != lr)
+    return {"FN": fn.sum(), "FP": fp.sum(), "FT": ft.sum(),
+            "total": fn.sum() + fp.sum() + ft.sum(),
+            "n_cp": (lo != REGULAR).sum()}
+
+
+def false_cases_host(orig, recon) -> Dict[str, int]:
+    return {k: int(v) for k, v in false_cases(orig, recon).items()}
+
+
+@jax.jit
+def max_abs_error(orig: jnp.ndarray, recon: jnp.ndarray) -> jnp.ndarray:
+    return jnp.abs(orig.astype(jnp.float32) - recon.astype(jnp.float32)).max()
+
+
+@jax.jit
+def psnr(orig: jnp.ndarray, recon: jnp.ndarray) -> jnp.ndarray:
+    o = orig.astype(jnp.float32)
+    r = recon.astype(jnp.float32)
+    mse = jnp.mean((o - r) ** 2)
+    rng = jnp.maximum(o.max() - o.min(), 1e-30)
+    return 20.0 * jnp.log10(rng) - 10.0 * jnp.log10(jnp.maximum(mse, 1e-38))
+
+
+def bitrate(n_values: int, nbytes: int) -> float:
+    """Average bits per value in the compressed stream (paper footnote 1)."""
+    return 8.0 * float(nbytes) / float(n_values)
+
+
+def compression_ratio(n_values: int, nbytes: int, itemsize: int = 4) -> float:
+    return float(n_values) * itemsize / float(nbytes)

@@ -1,0 +1,45 @@
+"""SZp linear quantizer (paper Sec. II-C).
+
+The paper defines the encoder  q_a = floor((a + eps) / (2 eps))  which equals
+round-half-up of a / (2 eps).  Values in the half-open bin
+[2 eps q - eps, 2 eps q + eps) share the index q.
+
+Reconstruction: the paper prints  a_hat = q * 2 eps - eps  and calls it the
+bin *center*; the true center of the bin above is  2 eps q  (the printed
+formula is the left edge and only bounds the error by 2 eps).  We default to
+the center so the claimed |a_hat - a| <= eps holds strictly; the paper's
+literal formula is available via recon="left" for ablation.  See DESIGN.md
+"Paper-faithfulness notes".
+
+Both the encoder and the decoder are monotone non-decreasing, which is the
+property behind the paper's FP = FT = 0 guarantee (Sec. III-B).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize(x: jnp.ndarray, eb: float) -> jnp.ndarray:
+    """Quantize floats to int32 bin indices under absolute error bound eb."""
+    x = x.astype(jnp.float32)
+    # floor((a + eb) / (2 eb)) -- paper formula, == round-half-up(a / 2eb).
+    return jnp.floor((x + eb) / (2.0 * eb)).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, eb: float, recon: str = "center") -> jnp.ndarray:
+    """Map bin indices back to representative values.
+
+    recon="center": a_hat = 2 eb q      (|a_hat - a| <= eb, default)
+    recon="left":   a_hat = 2 eb q - eb (paper's literal formula; <= 2 eb)
+    """
+    a = q.astype(jnp.float32) * (2.0 * eb)
+    if recon == "left":
+        a = a - eb
+    elif recon != "center":
+        raise ValueError(f"unknown recon mode: {recon}")
+    return a
+
+
+def quantize_roundtrip(x: jnp.ndarray, eb: float, recon: str = "center") -> jnp.ndarray:
+    """Quantize + dequantize (the lossy identity SZp applies to every value)."""
+    return dequantize(quantize(x, eb), eb, recon=recon)

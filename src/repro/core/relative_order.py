@@ -1,0 +1,59 @@
+"""Relative positioning metadata (paper Sec. IV-A, "RP" stage).
+
+For critical points that fall into the *same* quantization bin, an integer
+rank encodes their original value ordering so the decompressor can separate
+them again (paper Fig. 5).  Ranks are stored densely (0 at regular points)
+and re-compressed losslessly with a second B+LZ+BE pass (paper Sec. IV-A:
+"we apply the B+LZ and BE stages a second time ... we omit QZ for this
+metadata since it ... must remain lossless").
+
+Direction convention (DESIGN.md clarification): maxima and saddles are
+ranked *ascending* by value (rank 1 = smallest), minima *descending*
+(rank 1 = largest), so that the +-delta-ULP stencils in core/stencils.py
+restore the original order for both extrema kinds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.critical_points import MINIMA, REGULAR
+
+
+def compute_ranks(field: jnp.ndarray, labels: jnp.ndarray,
+                  codes: jnp.ndarray) -> jnp.ndarray:
+    """Per-point rank among same-(bin, type) critical points.
+
+    Args:
+      field:  (ny, nx) float32 original values.
+      labels: (ny, nx) int32 CD labels.
+      codes:  (ny, nx) int32 quantization bin indices.
+
+    Returns:
+      (ny, nx) int32 ranks; 0 at regular points, >= 1 at critical points.
+    """
+    f = field.astype(jnp.float32).reshape(-1)
+    lab = labels.reshape(-1)
+    q = codes.reshape(-1)
+    n = f.shape[0]
+
+    is_cp = lab != REGULAR
+    # group = (is_cp?, bin, type); non-CP points sort to the end (x32-safe:
+    # no combined 64-bit key — lexsort over the component keys instead).
+    noncp = (~is_cp).astype(jnp.int32)
+    # secondary sort key: value ascending, except minima descending.
+    sec = jnp.where(lab == MINIMA, -f, f)
+
+    # lexsort: last key is primary -> (noncp, bin, type, value)
+    order = jnp.lexsort((sec, lab, q, noncp))
+    q_s, lab_s, cp_s = q[order], lab[order], is_cp[order]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    new_seg = jnp.concatenate([
+        jnp.array([True]),
+        (q_s[1:] != q_s[:-1]) | (lab_s[1:] != lab_s[:-1]) | (cp_s[1:] != cp_s[:-1]),
+    ])
+    seg_start = jax.lax.associative_scan(jnp.maximum, jnp.where(new_seg, pos, 0))
+    rank_sorted = pos - seg_start + 1
+    ranks = jnp.zeros(n, jnp.int32).at[order].set(
+        jnp.where(cp_s, rank_sorted.astype(jnp.int32), 0))
+    return ranks.reshape(field.shape)

@@ -1,0 +1,111 @@
+"""SZp compression pipeline in JAX: QZ -> B + LZ (block delta) -> BE.
+
+Stream layout follows the paper's Fig. 6 (sections 1-5; TopoSZp adds 6-7 in
+core/toposzp.py):
+
+  (1) constant-block bitmap            ceil(B/8) bytes
+  (2) fixed-length block metadata      B bytes (per-block bit width)
+  (3) sign bits for all elements       ceil(n_pad/8) bytes
+  (4) first-element value per block    4*B bytes (quantized int32 outlier)
+  (5) packed magnitude byte stream     variable (sum of per-block widths)
+
+All stages are jit-able with static shapes; compressed buffers are fixed
+*capacity* with a dynamic valid ``nbytes`` (see DESIGN.md hardware notes).
+A lossless integer mode (used for the TopoSZp rank metadata, which must not
+be quantized) reuses stages (1)-(5) on raw int32 values.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core.quantize import dequantize, quantize
+from repro.utils import bitwidth, cdiv, pad_to_multiple
+
+DEFAULT_BLOCK = 32
+HEADER_BYTES = 32  # magic/version/n/shape/block/eb — accounted, materialized in io.py
+
+
+class SZpParts(NamedTuple):
+    """Compressed SZp stream (sections as arrays + dynamic byte count)."""
+    const_bits: jnp.ndarray      # packed constant-block bitmap
+    widths: jnp.ndarray          # (B,) uint8 per-block bit width
+    signs: jnp.ndarray           # packed delta sign bits (n_pad bits)
+    first: jnp.ndarray           # (B,) int32 first-element (outlier) codes
+    payload: jnp.ndarray         # (cap,) uint8 packed magnitudes
+    payload_nbytes: jnp.ndarray  # () int32 valid payload bytes
+    nbytes: jnp.ndarray          # () int32 total compressed size (with header)
+
+
+def _blocked_codes(codes: jnp.ndarray, block: int) -> jnp.ndarray:
+    q = pad_to_multiple(codes, block, axis=0, mode="edge")
+    return q.reshape(-1, block)
+
+
+def compress_codes(codes: jnp.ndarray, block: int = DEFAULT_BLOCK) -> SZpParts:
+    """Lossless stages (1)-(5) over int32 codes (B + LZ + BE)."""
+    qb = _blocked_codes(codes.astype(jnp.int32).ravel(), block)
+    nblocks, k = qb.shape
+    first = qb[:, 0]
+    deltas = qb[:, 1:] - qb[:, :-1]                       # (B, K-1) intra-block LZ
+    signs = jnp.concatenate(
+        [jnp.zeros((nblocks, 1), jnp.uint8), (deltas < 0).astype(jnp.uint8)], axis=1)
+    mags = jnp.abs(deltas).astype(jnp.uint32)
+    widths = bitwidth(mags.max(axis=1))                    # (B,)
+    payload, _, total = bitpack.pack_blocks(mags, widths)
+    const_bits = bitpack.pack_bits((widths == 0).astype(jnp.uint8))
+    signs_packed = bitpack.pack_bits(signs.reshape(-1))
+    nbytes = (HEADER_BYTES + const_bits.shape[0] + nblocks
+              + signs_packed.shape[0] + 4 * nblocks + total)
+    return SZpParts(const_bits, widths.astype(jnp.uint8), signs_packed,
+                    first, payload, total, nbytes.astype(jnp.int32))
+
+
+def decompress_codes(parts: SZpParts, n: int, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Invert :func:`compress_codes` -> (n,) int32 codes."""
+    widths = parts.widths.astype(jnp.int32)
+    nblocks = widths.shape[0]
+    k = block
+    mags = bitpack.unpack_blocks(parts.payload, widths, k - 1)  # (B, K-1)
+    signs = bitpack.unpack_bits(parts.signs, nblocks * k).reshape(nblocks, k)
+    deltas = jnp.where(signs[:, 1:] > 0, -(mags.astype(jnp.int32)),
+                       mags.astype(jnp.int32))
+    q = parts.first[:, None] + jnp.concatenate(
+        [jnp.zeros((nblocks, 1), jnp.int32), jnp.cumsum(deltas, axis=1)], axis=1)
+    return q.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def szp_compress(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK) -> SZpParts:
+    """Full SZp compression of a float field (any shape; flattened row-major)."""
+    codes = quantize(x.reshape(-1), eb)
+    return compress_codes(codes, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block", "recon"))
+def szp_decompress(parts: SZpParts, shape: Sequence[int], eb: float,
+                   block: int = DEFAULT_BLOCK, recon: str = "center") -> jnp.ndarray:
+    """Full SZp decompression back to a float field of ``shape``."""
+    n = 1
+    for s in shape:
+        n *= s
+    codes = decompress_codes(parts, n, block=block)
+    return dequantize(codes, eb, recon=recon).reshape(shape)
+
+
+def szp_roundtrip(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK) -> Tuple[jnp.ndarray, SZpParts]:
+    parts = szp_compress(x, eb, block=block)
+    return szp_decompress(parts, tuple(x.shape), eb, block=block), parts
+
+
+def compression_ratio(x: jnp.ndarray, parts: SZpParts) -> jnp.ndarray:
+    raw = x.size * x.dtype.itemsize
+    return raw / parts.nbytes.astype(jnp.float32)
+
+
+def num_blocks(n: int, block: int = DEFAULT_BLOCK) -> int:
+    return cdiv(n, block)

@@ -1,0 +1,7 @@
+from repro.data.fields import (DATASETS, gaussian_random_field, vortex_field,
+                               multiscale_field, make_dataset)
+from repro.data.synthetic import MarkovTokens, token_batches
+
+__all__ = ["DATASETS", "gaussian_random_field", "vortex_field",
+           "multiscale_field", "make_dataset", "MarkovTokens",
+           "token_batches"]

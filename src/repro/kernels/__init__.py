@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for TopoSZp's compute hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec tiling) with a
+pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py.  On this
+CPU container kernels are validated with interpret=True; on TPU the same
+bodies compile through Mosaic.
+"""

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: critical point detection (paper "CD" stage).
+
+Branch-free 4-neighbor stencil classification.  Halo handling follows the
+shifted-operand pattern (DESIGN.md): XLA materializes the four
+edge-replicated shifted views (cheap streaming copies the fusion pass folds
+into the kernel's input DMA), the kernel is then purely elementwise over 5
+operands and computes edge-validity masks from the grid offsets + iota.
+
+Output labels: REGULAR=0, MINIMA=1, SADDLE=2, MAXIMA=3 (2-bit codes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TY, DEFAULT_TX = 128, 128
+
+
+def _cp_kernel(ny_nx_ref, f_ref, t_ref, d_ref, l_ref, r_ref, out_ref):
+    f = f_ref[...]
+    t, d, l, r = t_ref[...], d_ref[...], l_ref[...], r_ref[...]
+    ny = ny_nx_ref[0]
+    nx = ny_nx_ref[1]
+
+    ti, tj = pl.program_id(0), pl.program_id(1)
+    by, bx = f.shape
+    ii = ti * by + jax.lax.broadcasted_iota(jnp.int32, (by, bx), 0)
+    jj = tj * bx + jax.lax.broadcasted_iota(jnp.int32, (by, bx), 1)
+    has_t = ii > 0
+    has_d = ii < ny - 1
+    has_l = jj > 0
+    has_r = jj < nx - 1
+
+    hi_t = jnp.where(has_t, t > f, True)
+    hi_d = jnp.where(has_d, d > f, True)
+    hi_l = jnp.where(has_l, l > f, True)
+    hi_r = jnp.where(has_r, r > f, True)
+    lo_t = jnp.where(has_t, t < f, True)
+    lo_d = jnp.where(has_d, d < f, True)
+    lo_l = jnp.where(has_l, l < f, True)
+    lo_r = jnp.where(has_r, r < f, True)
+
+    is_min = hi_t & hi_d & hi_l & hi_r
+    is_max = lo_t & lo_d & lo_l & lo_r
+    interior = has_t & has_d & has_l & has_r
+    is_saddle = interior & (((t > f) & (d > f) & (l < f) & (r < f)) |
+                            ((t < f) & (d < f) & (l > f) & (r > f)))
+
+    lab = jnp.where(is_min, 1, 0)
+    lab = jnp.where(is_saddle, 2, lab)
+    lab = jnp.where(is_max, 3, lab)
+    out_ref[...] = lab.astype(jnp.int32)
+
+
+def _shifts(field: jnp.ndarray):
+    """Edge-replicated t/d/l/r shifted views (host-side XLA slices)."""
+    p = jnp.pad(field, 1, mode="edge")
+    ny, nx = field.shape
+    return (p[:-2, 1:-1], p[2:, 1:-1], p[1:-1, :-2], p[1:-1, 2:])
+
+
+@functools.partial(jax.jit, static_argnames=("ty", "tx", "interpret"))
+def cp_detect(field: jnp.ndarray, ty: int = DEFAULT_TY, tx: int = DEFAULT_TX,
+              interpret: bool = True) -> jnp.ndarray:
+    """Classify every point of a 2-D field -> int32 labels (same shape)."""
+    ny, nx = field.shape
+    py, px = (-ny) % ty, (-nx) % tx
+    f = jnp.pad(field.astype(jnp.float32), ((0, py), (0, px)), mode="edge")
+    t, d, l, r = [jnp.pad(s, ((0, py), (0, px)), mode="edge")
+                  for s in _shifts(field.astype(jnp.float32))]
+    gy, gx = f.shape[0] // ty, f.shape[1] // tx
+    dims = jnp.array([ny, nx], jnp.int32)
+    spec = pl.BlockSpec((ty, tx), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _cp_kernel,
+        grid=(gy, gx),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] + [spec] * 5,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(f.shape, jnp.int32),
+        interpret=interpret,
+    )(dims, f, t, d, l, r)
+    return out[:ny, :nx]

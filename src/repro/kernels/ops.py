@@ -1,0 +1,83 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Every op takes ``backend=`` with three settings:
+  * "pallas"     — pl.pallas_call compiled for TPU (the production path)
+  * "interpret"  — same kernel body, interpreted on CPU (validation path;
+                   the default in this CPU container)
+  * "jnp"        — the pure-jnp oracle from kernels/ref.py
+
+Wrappers own all padding/unpadding so callers see natural shapes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import cp_detect as _cpk
+from repro.kernels import extrema_restore as _exk
+from repro.kernels import rbf_refine as _rbk
+from repro.kernels import szp_quant as _sqk
+from repro.kernels import ref as _ref
+from repro.utils import pad_to_multiple
+
+DEFAULT_BACKEND = "interpret"
+
+
+def _interp(backend: str) -> bool:
+    if backend not in ("pallas", "interpret", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend == "interpret"
+
+
+def szp_quant(xb: jnp.ndarray, eb: float, backend: str = DEFAULT_BACKEND,
+              tb: int = _sqk.DEFAULT_TB):
+    """Fused QZ+LZ over (B, K) blocks -> (first, mags, signs, widths)."""
+    if backend == "jnp":
+        return _ref.szp_quant_blocks_ref(xb, eb)
+    b = xb.shape[0]
+    tb = min(tb, b) if b % min(tb, b) == 0 else tb
+    xp = pad_to_multiple(xb, tb, axis=0)
+    first, mags, signs, widths = _sqk.szp_quant_blocks(
+        xp, eb, tb=tb, interpret=_interp(backend))
+    return first[:b], mags[:b], signs[:b], widths[:b]
+
+
+def szp_dequant(first, mags, signs, eb: float,
+                backend: str = DEFAULT_BACKEND, tb: int = _sqk.DEFAULT_TB):
+    """Inverse of szp_quant -> (B, K) float32 reconstruction."""
+    if backend == "jnp":
+        return _ref.szp_dequant_blocks_ref(first, mags, signs, eb)
+    b = first.shape[0]
+    fp = pad_to_multiple(first, tb, axis=0)
+    mp = pad_to_multiple(mags, tb, axis=0)
+    sp = pad_to_multiple(signs, tb, axis=0)
+    out = _sqk.szp_dequant_blocks(fp, mp, sp, eb, tb=tb,
+                                  interpret=_interp(backend))
+    return out[:b]
+
+
+def cp_detect(field: jnp.ndarray, backend: str = DEFAULT_BACKEND,
+              ty: int = _cpk.DEFAULT_TY, tx: int = _cpk.DEFAULT_TX):
+    """Critical point classification -> int32 labels."""
+    if backend == "jnp":
+        return _ref.cp_detect_ref(field)
+    return _cpk.cp_detect(field, ty=ty, tx=tx, interpret=_interp(backend))
+
+
+def extrema_restore(recon, labels, cur_labels, ranks, eb: float,
+                    backend: str = DEFAULT_BACKEND,
+                    ty: int = _exk.DEFAULT_TY, tx: int = _exk.DEFAULT_TX):
+    """Fused lost-extrema restoration -> corrected field."""
+    if backend == "jnp":
+        return _ref.extrema_restore_ref(recon, labels, cur_labels, ranks, eb)
+    return _exk.extrema_restore(recon, labels, cur_labels, ranks, eb,
+                                ty=ty, tx=tx, interpret=_interp(backend))
+
+
+def shepard_refine(field: jnp.ndarray, sigma: float = 0.75, radius: int = 2,
+                   backend: str = DEFAULT_BACKEND,
+                   ty: int = _rbk.DEFAULT_TY, tx: int = _rbk.DEFAULT_TX):
+    """Separable convex RBF estimate (global sigma/radius hot path)."""
+    if backend == "jnp":
+        return _ref.shepard_refine_global_ref(field, sigma=sigma, radius=radius)
+    return _rbk.shepard_refine_global(field, sigma=sigma, radius=radius,
+                                      ty=ty, tx=tx, interpret=_interp(backend))

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: separable Gaussian-RBF (Shepard) refinement.
+
+The convex neighborhood estimate of core/rbf.py with a *global* sigma/radius
+is separable:  exp(-(dy^2+dx^2)/2s^2) = g(dy) g(dx),  so
+
+  S(p)  = sum_{|dy|<=r} g(dy) R(p + dy e_y) - f(p),   R = row pass,
+  W     = (sum g)^2 - 1,
+  est   = S / W.
+
+Two elementwise 7-tap passes (row then column), each a single Pallas kernel
+over shifted operands — no halo DMA needed, weights are compile-time
+constants.  This is the TPU hot path; the per-point-adaptive variant stays
+on the pure-jnp path (core/rbf.py), see DESIGN.md "hardware adaptation".
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TY, DEFAULT_TX = 128, 128
+MAX_RADIUS = 3
+
+
+def _taps(sigma: float, radius: int):
+    g = [math.exp(-(o * o) / (2.0 * sigma * sigma)) if abs(o) <= radius else 0.0
+         for o in range(-MAX_RADIUS, MAX_RADIUS + 1)]
+    return g
+
+
+def _make_pass_kernel(weights):
+    def kernel(*refs):
+        out_ref = refs[-1]
+        acc = None
+        for w, ref in zip(weights, refs[:-1]):
+            if w == 0.0:
+                continue
+            term = ref[...] * jnp.float32(w)
+            acc = term if acc is None else acc + term
+        out_ref[...] = acc
+    return kernel
+
+
+def _axis_shifts(field: jnp.ndarray, axis: int):
+    """Edge-replicated shifts of ``field`` by -3..+3 along ``axis``."""
+    pad = [(0, 0), (0, 0)]
+    pad[axis] = (MAX_RADIUS, MAX_RADIUS)
+    p = jnp.pad(field, pad, mode="edge")
+    n = field.shape[axis]
+    outs = []
+    for o in range(2 * MAX_RADIUS + 1):
+        sl = [slice(None), slice(None)]
+        sl[axis] = slice(o, o + n)
+        outs.append(p[tuple(sl)])
+    return outs
+
+
+def _run_pass(field: jnp.ndarray, weights, axis: int, ty: int, tx: int,
+              interpret: bool) -> jnp.ndarray:
+    ny, nx = field.shape
+    py, px = (-ny) % ty, (-nx) % tx
+    shifts = [jnp.pad(s, ((0, py), (0, px)), mode="edge")
+              for s in _axis_shifts(field, axis)]
+    gy, gx = shifts[0].shape[0] // ty, shifts[0].shape[1] // tx
+    spec = pl.BlockSpec((ty, tx), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _make_pass_kernel(weights),
+        grid=(gy, gx),
+        in_specs=[spec] * len(shifts),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shifts[0].shape, jnp.float32),
+        interpret=interpret,
+    )(*shifts)
+    return out[:ny, :nx]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma", "radius", "ty", "tx", "interpret"))
+def shepard_refine_global(field: jnp.ndarray, sigma: float = 0.75,
+                          radius: int = 2, ty: int = DEFAULT_TY,
+                          tx: int = DEFAULT_TX,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Separable convex RBF estimate of every point (center excluded)."""
+    f = field.astype(jnp.float32)
+    g = _taps(sigma, radius)
+    row = _run_pass(f, g, axis=1, ty=ty, tx=tx, interpret=interpret)
+    col = _run_pass(row, g, axis=0, ty=ty, tx=tx, interpret=interpret)
+    wsum = sum(g)
+    denom = wsum * wsum - 1.0          # total weight minus the center (g0=1)
+    return (col - f) / jnp.float32(max(denom, 1e-30))

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Each function mirrors the corresponding kernel's contract exactly; the
+kernel tests sweep shapes/dtypes and assert allclose (or exact equality for
+integer outputs) against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.critical_points import classify as _classify
+from repro.core.quantize import dequantize, quantize
+from repro.utils import bitwidth, ulp_step
+
+
+def szp_quant_blocks_ref(xb: jnp.ndarray, eb: float):
+    """Oracle for kernels.szp_quant.szp_quant_blocks."""
+    q = quantize(xb, eb)
+    first = q[:, 0]
+    deltas = q[:, 1:] - q[:, :-1]
+    signs = (deltas < 0).astype(jnp.int32)
+    mags = jnp.abs(deltas).astype(jnp.uint32)
+    widths = bitwidth(mags.max(axis=1))
+    return first, mags, signs, widths
+
+
+def szp_dequant_blocks_ref(first, mags, signs, eb: float):
+    """Oracle for kernels.szp_quant.szp_dequant_blocks."""
+    deltas = jnp.where(signs > 0, -(mags.astype(jnp.int32)),
+                       mags.astype(jnp.int32))
+    codes = first[:, None] + jnp.concatenate(
+        [jnp.zeros((first.shape[0], 1), jnp.int32),
+         jnp.cumsum(deltas, axis=1)], axis=1)
+    return dequantize(codes, eb)
+
+
+def cp_detect_ref(field: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.cp_detect.cp_detect (== core classify)."""
+    return _classify(field)
+
+
+def extrema_restore_ref(recon, labels, cur_labels, ranks, eb: float):
+    """Oracle for kernels.extrema_restore.extrema_restore."""
+    from repro.core.critical_points import neighbor_min_max
+    recon = recon.astype(jnp.float32)
+    nmin, nmax = neighbor_min_max(recon)
+    delta = jnp.maximum(ranks, 1)
+    tgt_min = ulp_step(nmin, -delta)
+    tgt_max = ulp_step(nmax, +delta)
+    lost_min = (labels == 1) & (cur_labels != 1)
+    lost_max = (labels == 3) & (cur_labels != 3)
+    ok_min = lost_min & (tgt_min >= recon - eb) & (tgt_min <= recon + eb)
+    ok_max = lost_max & (tgt_max >= recon - eb) & (tgt_max <= recon + eb)
+    out = jnp.where(ok_min, tgt_min, recon)
+    return jnp.where(ok_max, tgt_max, out)
+
+
+def shepard_refine_global_ref(field: jnp.ndarray, sigma: float = 0.75,
+                              radius: int = 2) -> jnp.ndarray:
+    """Oracle for kernels.rbf_refine.shepard_refine_global.
+
+    Full (non-separable) 7x7 window with fixed sigma/Chebyshev radius,
+    center excluded, edge-replicated — the direct form of eq. (2).
+    """
+    from repro.core.rbf import MAX_RADIUS, _offsets, _window_patches
+    f = field.astype(jnp.float32)
+    patches = _window_patches(f, MAX_RADIUS)
+    dy, dx = _offsets(MAX_RADIUS)
+    dist2 = (dy ** 2 + dx ** 2).astype(jnp.float32)
+    w = jnp.exp(-dist2 / (2.0 * sigma * sigma))
+    keep = (jnp.maximum(jnp.abs(dy), jnp.abs(dx)) <= radius) & (dist2 > 0)
+    w = jnp.where(keep, w, 0.0)
+    return (patches * w[None, None, :]).sum(-1) / w.sum()

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimb driver: re-lower a cell with strategy overrides and
+report the three roofline terms (hypothesis -> change -> measure loop).
+
+  python -m repro.launch.hillclimb --arch olmoe_1b_7b --shape train_4k \\
+      --set moe_impl=shard_map
+"""
+import argparse
+import json
+
+from repro.configs.base import SHAPES
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry, set_active_mesh
+from repro.roofline import analysis as ra
+
+
+def measure(arch: str, shape: str, overrides: dict, tag: str,
+            save: bool = True):
+    cfg = registry.get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    rec = dryrun.run_cell(arch, shape, multi_pod=False, cfg=cfg,
+                          extra_tag=f"__{tag}" if tag else "",
+                          save=save, costing=True)
+    row = ra.analyze_record(rec, cfg=cfg)
+    print(f"[hillclimb] {arch} x {shape} [{tag or 'baseline'}] "
+          f"compute={row.compute_s * 1e3:.1f}ms "
+          f"memory={row.memory_s * 1e3:.1f}ms "
+          f"collective={row.collective_s * 1e3:.1f}ms "
+          f"bottleneck={row.bottleneck} "
+          f"frac={ra.roofline_fraction(row):.3f} "
+          f"6ND/HLO={row.useful_ratio:.2f}", flush=True)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+    tag = args.tag or "_".join(f"{k}-{v}" for k, v in overrides.items())
+    measure(args.arch, args.shape, overrides, tag)
+
+
+if __name__ == "__main__":
+    main()

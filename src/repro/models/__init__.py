@@ -1,0 +1,9 @@
+"""Model zoo: composable decoder blocks covering all assigned families."""
+from repro.models.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models.lm import (init_params, loss_fn, prefill, decode_step,
+                             make_caches, forward, param_count)
+from repro.models.common import set_active_mesh, get_active_mesh
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "init_params",
+           "loss_fn", "prefill", "decode_step", "make_caches", "forward",
+           "param_count", "set_active_mesh", "get_active_mesh"]

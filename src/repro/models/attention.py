@@ -1,0 +1,249 @@
+"""Attention: GQA/MQA, RoPE, chunked-causal (flash-style), local windows,
+logit softcap, qk-norm, and decode with full or ring-buffer KV caches."""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (axis_size, dense, ninit, rms_norm, rope,
+                                 shard, softcap)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S_cache, Hkv, Dh)
+    v: jnp.ndarray       # (B, S_cache, Hkv, Dh)
+    pos: jnp.ndarray     # (S_cache,) absolute positions (-1 = empty)
+    next_pos: jnp.ndarray  # () int32 next absolute position
+
+
+def init_attention(key, cfg, kind: str):
+    """Projections are stored FUSED 2-D ((d, H*Dh) / (H*Dh, d)) so the
+    feature dim shards over 'model' for any head count (odd head counts
+    like 36 or 10 cannot shard the head dim over 16; the fused feature dim
+    is always a multiple of the axis) — megatron column/row parallel."""
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        "w_q": ninit(ks[0], (d, hq * dh), sc, cfg.param_dtype),
+        "w_k": ninit(ks[1], (d, hkv * dh), sc, cfg.param_dtype),
+        "w_v": ninit(ks[2], (d, hkv * dh), sc, cfg.param_dtype),
+        "w_o": ninit(ks[3], (hq * dh, d), 1.0 / math.sqrt(hq * dh),
+                     cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((dh,), cfg.param_dtype)
+        p["k_scale"] = jnp.zeros((dh,), cfg.param_dtype)
+    return p
+
+
+def _theta(cfg, kind: str) -> float:
+    if kind == "local" and cfg.rope_theta_local is not None:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def _window(cfg, kind: str) -> Optional[int]:
+    return cfg.window_size if kind == "local" else None
+
+
+def _gqa_scores(q, k, attn_cap):
+    """q: (B,Sq,Hkv,G,Dh), k: (B,Skv,Hkv,Dh) -> (B,Hkv,G,Sq,Skv) f32."""
+    s = jnp.einsum("bqhgd,bshd->bhgqs", q, k,
+                   preferred_element_type=jnp.float32)
+    return softcap(s, attn_cap)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Hkv,G,Sq,Skv) f32, v: (B,Skv,Hkv,Dh) -> (B,Sq,Hkv,G,Dh)."""
+    return jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def _chunk_attend(q, k, v, q_lo, kv_lo, *, window, attn_cap, scale,
+                  heads_sharded):
+    """Attend one q chunk to one kv span with causal(+window) masking.
+
+    Scores are the big intermediate: sharded over 'model' on the kv-head
+    dim when the head count divides the axis, otherwise on the q-chunk dim
+    (sequence/context parallelism — the fallback for GQA archs with few kv
+    heads).
+    """
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    qpos = q_lo + jnp.arange(sq)
+    kpos = kv_lo + jnp.arange(skv)
+    mask = qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = _gqa_scores(q * scale, k, attn_cap)      # (B,Hkv,G,Sq,Skv)
+    if heads_sharded:
+        s = shard(s, "batch", "model", None, None, None)
+    else:
+        s = shard(s, "batch", None, None, "model", None)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def attend_train(q, k, v, *, window: Optional[int], attn_cap: Optional[float],
+                 chunk: int = 1024) -> jnp.ndarray:
+    """Causal (optionally windowed) attention over a full sequence.
+
+    Statically chunked over queries; each chunk only reads the kv span it
+    can see (so local layers do ~(window/S) of the full-attention FLOPs).
+    q: (B,S,Hq,Dh) -> (B,S,Hq,Dh)
+    """
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    heads_sharded = hkv % axis_size("model") == 0
+    outs = []
+    for ci in range(n):
+        q_lo, q_hi = ci * chunk, min((ci + 1) * chunk, s)
+        kv_lo = 0 if window is None else max(0, q_hi - window - (chunk - 1))
+        kv_lo = (kv_lo // chunk) * chunk
+        kv_hi = q_hi
+        qc = qg[:, q_lo:q_hi]
+        kc = k[:, kv_lo:kv_hi]
+        vc = v[:, kv_lo:kv_hi]
+        outs.append(_chunk_attend(qc, kc, vc, q_lo, kv_lo, window=window,
+                                  attn_cap=attn_cap, scale=scale,
+                                  heads_sharded=heads_sharded))
+    return jnp.concatenate(outs, axis=1).reshape(b, s, hq, dh)
+
+
+def attend_decode(q, cache: KVCache, *, window: Optional[int],
+                  attn_cap: Optional[float]) -> jnp.ndarray:
+    """One-token attention against a (possibly ring) KV cache.
+
+    q: (B,1,Hq,Dh) -> (B,1,Hq,Dh).  Masking is by absolute positions stored
+    in the cache, so ring buffers need no unrotation.
+    """
+    b, _, hq, dh = q.shape
+    hkv = cache.k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dh) * (1.0 / math.sqrt(dh))
+    s = _gqa_scores(qg, cache.k, attn_cap)          # (B,Hkv,G,1,Skv)
+    cur = cache.next_pos - 1                         # position of this token
+    valid = cache.pos >= 0
+    valid &= cache.pos <= cur
+    if window is not None:
+        valid &= (cur - cache.pos) < window
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, cache.v).reshape(b, 1, hq, dh)
+
+
+def init_cache(cfg, kind: str, batch: int, max_len: int) -> KVCache:
+    """Allocate an empty cache; local layers use a window-sized ring."""
+    w = _window(cfg, kind)
+    s_cache = min(max_len, w) if w is not None else max_len
+    shape = (batch, s_cache, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.activation_dtype),
+        v=jnp.zeros(shape, cfg.activation_dtype),
+        pos=jnp.full((s_cache,), -1, jnp.int32),
+        next_pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_spec(cfg, kind: str, batch: int, max_len: int) -> KVCache:
+    """ShapeDtypeStruct version of init_cache (dry-run, no allocation)."""
+    w = _window(cfg, kind)
+    s_cache = min(max_len, w) if w is not None else max_len
+    shape = (batch, s_cache, cfg.num_kv_heads, cfg.head_dim)
+    sds = jax.ShapeDtypeStruct
+    return KVCache(k=sds(shape, cfg.activation_dtype),
+                   v=sds(shape, cfg.activation_dtype),
+                   pos=sds((s_cache,), jnp.int32),
+                   next_pos=sds((), jnp.int32))
+
+
+def _cache_write(cache: KVCache, k_new, v_new) -> KVCache:
+    """Append one token (B,1,Hkv,Dh) at next_pos (ring semantics)."""
+    s_cache = cache.k.shape[1]
+    slot = cache.next_pos % s_cache
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, cache.next_pos[None], slot, axis=0)
+    return KVCache(k, v, pos, cache.next_pos + 1)
+
+
+def _prefill_cache(cfg, kind, k, v, s: int) -> KVCache:
+    """Build a cache from full-sequence K/V after prefill."""
+    w = _window(cfg, kind)
+    if w is not None and k.shape[1] > w:
+        # keep the last `w` entries; slot = pos % w keeps ring semantics
+        start = s - w
+        ks, vs = k[:, start:], v[:, start:]
+        pos_tail = jnp.arange(start, s)
+        slots = pos_tail % w
+        order = jnp.argsort(slots)
+        return KVCache(ks[:, order], vs[:, order], pos_tail[order],
+                       jnp.int32(s))
+    s_cache = k.shape[1]
+    return KVCache(k, v,
+                   jnp.arange(s_cache, dtype=jnp.int32),
+                   jnp.int32(s))
+
+
+def apply_attention(params, x, cfg, kind: str,
+                    cache: Optional[KVCache] = None,
+                    pos_offset: jnp.ndarray | int = 0
+                    ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Full attention sub-block: proj -> rope -> attend -> out-proj.
+
+    Train/prefill: x is (B,S,d), cache None -> returns (y, prefill cache).
+    Decode: x is (B,1,d), cache given -> returns (y, updated cache).
+    """
+    b, s, d = x.shape
+    theta = _theta(cfg, kind)
+    w = _window(cfg, kind)
+
+    q = dense(x, params["w_q"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = dense(x, params["w_k"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(x, params["w_v"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    # heads on 'model' when divisible, else q on the sequence dim
+    # (context parallel); k/v stay replicated over 'model' for local reads.
+    if cfg.num_heads % axis_size("model") == 0:
+        q = shard(q, "batch", None, "model", None)
+    else:
+        q = shard(q, "batch", "model", None, None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_scale"], cfg.norm_eps)
+
+    decode = cache is not None and s == 1
+    if decode:
+        positions = jnp.full((b, 1), cache.next_pos, jnp.int32)
+    else:
+        positions = (jnp.arange(s, dtype=jnp.int32)[None, :]
+                     + jnp.asarray(pos_offset, jnp.int32))
+        positions = jnp.broadcast_to(positions, (b, s))
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+
+    if decode:
+        new_cache = _cache_write(cache, k.astype(cache.k.dtype),
+                                 v.astype(cache.v.dtype))
+        out = attend_decode(q, new_cache, window=w, attn_cap=cfg.attn_softcap)
+    else:
+        out = attend_train(q, k, v, window=w, attn_cap=cfg.attn_softcap,
+                           chunk=cfg.attn_chunk)
+        new_cache = _prefill_cache(cfg, kind, k, v, s)
+
+    out = shard(out, "batch", None, "model", None)
+    y = dense(out.reshape(b, s, -1), params["w_o"])
+    return shard(y, "batch", None, None), new_cache

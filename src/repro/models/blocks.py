@@ -1,0 +1,94 @@
+"""Decoder blocks: one init/apply pair per layer kind.
+
+Kinds: 'global' / 'local' (attention), 'recurrent' (RG-LRU mixer + FFN),
+'rwkv' (time-mix + channel-mix).  All blocks are pre-norm residual.  MoE
+configs replace the dense FFN with routed experts (plus Arctic's parallel
+dense-residual FFN when cfg.dense_residual).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (KVCache, apply_attention, cache_spec,
+                                    init_attention, init_cache)
+from repro.models.common import rms_norm, shard
+from repro.models.ffn import apply_ffn, init_ffn
+from repro.models.moe import apply_moe, apply_moe_shard_map, init_moe
+from repro.models.rglru import (RGLRUState, apply_rglru, init_rglru,
+                                init_rglru_state, rglru_state_spec)
+from repro.models.rwkv6 import (RWKVState, channel_mix, init_rwkv,
+                                init_rwkv_state, rwkv_state_spec, time_mix)
+
+
+def init_block(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+    if kind == "rwkv":
+        p["rwkv"] = init_rwkv(ks[0], cfg)
+        p["ln2"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+        return p
+    if kind == "recurrent":
+        p["mixer"] = init_rglru(ks[0], cfg)
+    else:  # global / local attention
+        p["attn"] = init_attention(ks[0], cfg, kind)
+    p["ln2"] = jnp.zeros((cfg.d_model,), cfg.param_dtype)
+    if cfg.num_experts > 0:
+        p["moe"] = init_moe(ks[1], cfg)
+        if cfg.dense_residual:
+            p["dense_ffn"] = init_ffn(ks[2], cfg,
+                                      d_ff=cfg.moe_dense_ff or cfg.d_ff)
+    else:
+        p["ffn"] = init_ffn(ks[1], cfg)
+    return p
+
+
+def block_cache(cfg, kind: str, batch: int, max_len: int, spec: bool = False):
+    """Decode-state structure for one block of the given kind."""
+    if kind == "rwkv":
+        return rwkv_state_spec(cfg, batch) if spec else init_rwkv_state(cfg, batch)
+    if kind == "recurrent":
+        return rglru_state_spec(cfg, batch) if spec else init_rglru_state(cfg, batch)
+    return (cache_spec(cfg, kind, batch, max_len) if spec
+            else init_cache(cfg, kind, batch, max_len))
+
+
+def apply_block(params, x, cfg, kind: str, cache: Optional[Any] = None,
+                pos_offset: jnp.ndarray | int = 0
+                ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Returns (x', cache', aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind == "rwkv":
+        h, cache = time_mix(params["rwkv"], rms_norm(x, params["ln1"],
+                                                     cfg.norm_eps), cfg, cache)
+        x = x + h
+        h, cache = channel_mix(params["rwkv"],
+                               rms_norm(x, params["ln2"], cfg.norm_eps),
+                               cfg, cache)
+        x = x + h
+        return shard(x, "batch", None, None), cache, aux
+
+    if kind == "recurrent":
+        h, cache = apply_rglru(params["mixer"],
+                               rms_norm(x, params["ln1"], cfg.norm_eps),
+                               cfg, cache)
+    else:
+        h, cache = apply_attention(params["attn"],
+                                   rms_norm(x, params["ln1"], cfg.norm_eps),
+                                   cfg, kind, cache=cache,
+                                   pos_offset=pos_offset)
+    x = x + h
+
+    y = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if cfg.num_experts > 0:
+        moe_fn = (apply_moe_shard_map if cfg.moe_impl == "shard_map"
+                  else apply_moe)
+        m, aux = moe_fn(params["moe"], y, cfg)
+        if cfg.dense_residual:
+            m = m + apply_ffn(params["dense_ffn"], y, cfg)
+        x = x + m
+    else:
+        x = x + apply_ffn(params["ffn"], y, cfg)
+    return shard(x, "batch", None, None), cache, aux

@@ -1,0 +1,38 @@
+"""Dense FFN variants: SwiGLU / GeGLU / plain-GELU MLP."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTS, dense, gelu, ninit, shard
+
+
+def init_ffn(key, cfg, d_ff: int | None = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc = 1.0 / math.sqrt(d)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {
+        "w_in": ninit(ks[0], (d, ff), sc, cfg.param_dtype),
+        "w_out": ninit(ks[1], (ff, d), 1.0 / math.sqrt(ff), cfg.param_dtype),
+    }
+    if gated:
+        p["w_gate"] = ninit(ks[2], (d, ff), sc, cfg.param_dtype)
+    return p
+
+
+def apply_ffn(params, x, cfg):
+    """x: (B,S,d) -> (B,S,d)."""
+    h = dense(x, params["w_in"])
+    h = shard(h, "batch", None, "model")
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(dense(x, params["w_gate"])) * h
+    elif cfg.act == "geglu":
+        h = gelu(dense(x, params["w_gate"])) * h
+    else:
+        h = ACTS.get(cfg.act, gelu)(h)
+    y = dense(h, params["w_out"])
+    return shard(y, "batch", None, None)

@@ -1,0 +1,214 @@
+"""The language model: embedding -> scanned layer groups -> head.
+
+Layers are stacked into scanned *groups* (one group = one cycle of
+cfg.layer_pattern) so compile time and HLO size stay flat in depth; the
+remainder layers (depth % pattern) run unrolled as a tail.  The same forward
+serves training (loss), prefill (build caches) and decode (one token).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import apply_block, block_cache, init_block
+from repro.models.common import (chunked_softmax_xent, dense, ninit,
+                                 rms_norm, shard, softcap)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    groups, tail = cfg.pattern_layers()
+    n_groups = len(groups)
+    keys = jax.random.split(key, 4 + n_groups + len(tail))
+    p: Dict[str, Any] = {
+        "embed": ninit(keys[0], (cfg.padded_vocab, cfg.d_model),
+                       1.0 / math.sqrt(cfg.d_model), cfg.param_dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["w_out"] = ninit(keys[1], (cfg.d_model, cfg.padded_vocab),
+                           1.0 / math.sqrt(cfg.d_model), cfg.param_dtype)
+    if n_groups:
+        pattern = cfg.layer_pattern
+
+        def one_group(k):
+            ks = jax.random.split(k, len(pattern))
+            return tuple(init_block(ks[i], cfg, kind)
+                         for i, kind in enumerate(pattern))
+
+        p["groups"] = jax.vmap(one_group)(
+            jnp.stack(keys[4:4 + n_groups]))
+    if tail:
+        p["tail"] = [init_block(keys[4 + n_groups + i], cfg, kind)
+                     for i, kind in enumerate(tail)]
+    return p
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def make_caches(cfg, batch: int, max_len: int, spec: bool = False):
+    """Decode caches: (stacked group caches, tail cache list)."""
+    groups, tail = cfg.pattern_layers()
+    n_groups = len(groups)
+    gcaches = None
+    if n_groups:
+        one = tuple(block_cache(cfg, kind, batch, max_len, spec=spec)
+                    for kind in cfg.layer_pattern)
+        if spec:
+            gcaches = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype),
+                one)
+        else:
+            gcaches = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), one)
+    tcaches = [block_cache(cfg, kind, batch, max_len, spec=spec)
+               for kind in tail]
+    return gcaches, tcaches
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x, "batch", None, None)
+
+
+def _inputs_to_x(params, cfg, batch: Dict[str, jnp.ndarray]):
+    """Resolve token ids / stub-frontend embeddings into (B, S, d)."""
+    if cfg.frontend == "audio_frames":
+        return shard(batch["embeds"].astype(cfg.activation_dtype),
+                     "batch", None, None)
+    if cfg.frontend == "vision_patches":
+        prefix = batch["patch_embeds"].astype(cfg.activation_dtype)
+        toks = _embed_tokens(params, cfg, batch["tokens"])
+        return shard(jnp.concatenate([prefix, toks], axis=1),
+                     "batch", None, None)
+    return _embed_tokens(params, cfg, batch["tokens"])
+
+
+def forward(params, cfg, x, caches=None, mode: str = "train",
+            pos_offset: jnp.ndarray | int = 0):
+    """Run the block stack.  Returns (hidden, caches', aux)."""
+    groups, tail = cfg.pattern_layers()
+    n_groups = len(groups)
+    pattern = cfg.layer_pattern
+    aux = jnp.float32(0.0)
+    gcaches, tcaches = caches if caches is not None else (None, None)
+
+    if n_groups:
+        def group_body(carry, xs):
+            x, aux = carry
+            gp = xs if gcaches is None else xs[0]
+            gc = None if gcaches is None else xs[1]
+            new_caches = []
+            for i, kind in enumerate(pattern):
+                x, c, a = apply_block(gp[i], x, cfg, kind,
+                                      None if gc is None else gc[i],
+                                      pos_offset)
+                new_caches.append(c)
+                aux = aux + a
+            ys = tuple(new_caches) if mode != "train" else None
+            return (x, aux), ys
+
+        body = jax.checkpoint(group_body) if (cfg.remat and mode == "train") \
+            else group_body
+        xs = params["groups"] if gcaches is None \
+            else (params["groups"], gcaches)
+        if cfg.unroll_groups:
+            # costing mode: python loop so XLA cost analysis sees every
+            # group (lax.scan bodies are counted once — see dryrun.py)
+            ys = []
+            carry = (x, aux)
+            for gi in range(n_groups):
+                xi = jax.tree.map(lambda a: a[gi], xs)
+                carry, y = body(carry, xi)
+                ys.append(y)
+            (x, aux) = carry
+            new_g = (jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+                     if ys and ys[0] is not None else None)
+        else:
+            (x, aux), new_g = jax.lax.scan(body, (x, aux), xs)
+    else:
+        new_g = None
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        c_in = tcaches[i] if tcaches is not None else None
+        x, c, a = apply_block(params["tail"][i], x, cfg, kind, c_in,
+                              pos_offset)
+        new_tail.append(c)
+        aux = aux + a
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, (new_g, new_tail), aux
+
+
+def lm_head_weight(params, cfg):
+    return (params["embed"].T if cfg.tie_embeddings else params["w_out"])
+
+
+def logits_fn(params, cfg, hidden):
+    """Full logits for a short (decode-size) hidden: (B, s, V)."""
+    l = dense(hidden, lm_head_weight(params, cfg)).astype(jnp.float32)
+    l = softcap(l, cfg.logit_softcap)
+    if cfg.padded_vocab > cfg.vocab_size:
+        l = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                      l, -1e30)
+    return shard(l, "batch", None, "model")
+
+
+# --------------------------------------------------------------------------
+# Task heads
+# --------------------------------------------------------------------------
+
+def loss_fn(params, cfg, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Next-token loss for any frontend.  See configs/base.py for batches."""
+    x = _inputs_to_x(params, cfg, batch)
+    h, _, aux = forward(params, cfg, x, mode="train")
+
+    w = lm_head_weight(params, cfg)
+    if cfg.frontend == "vision_patches":
+        npre = batch["patch_embeds"].shape[1]
+        ntok = batch["tokens"].shape[1]
+        h_pred = h[:, npre - 1:npre - 1 + ntok, :]
+        labels = batch["tokens"]
+    elif cfg.frontend == "audio_frames":
+        h_pred = h[:, :-1, :]
+        labels = batch["labels"][:, 1:]
+    else:
+        h_pred = h[:, :-1, :]
+        labels = batch["tokens"][:, 1:]
+
+    xent = chunked_softmax_xent(h_pred, w, labels, chunk=cfg.loss_chunk,
+                                logit_cap=cfg.logit_softcap,
+                                real_vocab=cfg.vocab_size,
+                                unroll=cfg.unroll_loss)
+    return xent + cfg.router_aux_weight * aux
+
+
+def prefill(params, cfg, batch: Dict[str, jnp.ndarray]):
+    """Build decode caches from a prompt; returns (last_logits, caches)."""
+    x = _inputs_to_x(params, cfg, batch)
+    h, caches, _ = forward(params, cfg, x, mode="prefill")
+    return logits_fn(params, cfg, h[:, -1:, :]), caches
+
+
+def decode_step(params, cfg, tokens, caches):
+    """One greedy decode step.  tokens: (B, 1) -> (next (B,1), logits, caches)."""
+    x = _embed_tokens(params, cfg, tokens)
+    h, caches, _ = forward(params, cfg, x, caches=caches, mode="decode")
+    logits = logits_fn(params, cfg, h)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    return nxt, logits, caches

@@ -1,0 +1,38 @@
+"""Architecture registry: --arch <id> -> ArchConfig (+ smoke variants)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCH_IDS: List[str] = [
+    "rwkv6_3b",
+    "recurrentgemma_2b",
+    "minicpm_2b",
+    "phi3_mini_3p8b",
+    "gemma2_2b",
+    "gemma3_4b",
+    "arctic_480b",
+    "olmoe_1b_7b",
+    "musicgen_medium",
+    "internvl2_76b",
+]
+
+
+def get_config(arch: str):
+    """Full published config for ``--arch <id>``."""
+    arch = arch.replace("-", "_").replace(".", "p")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    """Reduced same-family config for CPU smoke tests."""
+    arch = arch.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config()
+
+
+def all_configs() -> Dict[str, object]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,130 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU gated recurrence
+[arXiv:2402.19427].
+
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a),  i_t = sigmoid(W_x x_t + b_x)
+         log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses jax.lax.associative_scan over the linear recurrence
+(log-depth, TPU-friendly); decode is a single fused step with carried
+(h, conv window) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, gelu, ninit, shard
+
+_C = 8.0
+_CONV_W = 4
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray          # (B, d_rnn) recurrence state
+    conv: jnp.ndarray       # (B, CONV_W-1, d_rnn) trailing conv inputs
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    dr = cfg.rnn_width
+    ks = iter(jax.random.split(key, 8))
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "w_branch": ninit(next(ks), (d, dr), sc, cfg.param_dtype),
+        "w_gate_branch": ninit(next(ks), (d, dr), sc, cfg.param_dtype),
+        "conv_w": ninit(next(ks), (_CONV_W, dr), 0.1, cfg.param_dtype),
+        "conv_b": jnp.zeros((dr,), cfg.param_dtype),
+        "w_a": ninit(next(ks), (dr, dr), 1.0 / math.sqrt(dr), cfg.param_dtype),
+        "b_a": jnp.zeros((dr,), cfg.param_dtype),
+        "w_x": ninit(next(ks), (dr, dr), 1.0 / math.sqrt(dr), cfg.param_dtype),
+        "b_x": jnp.zeros((dr,), cfg.param_dtype),
+        # Lambda init so a ~ uniform in [0.9, 0.999] (Griffin appendix)
+        "lam": jnp.asarray(
+            jnp.linspace(2.0, 6.0, dr), cfg.param_dtype),
+        "w_out": ninit(next(ks), (dr, d), 1.0 / math.sqrt(dr), cfg.param_dtype),
+    }
+
+
+def init_rglru_state(cfg, batch: int) -> RGLRUState:
+    dr = cfg.rnn_width
+    return RGLRUState(h=jnp.zeros((batch, dr), jnp.float32),
+                      conv=jnp.zeros((batch, _CONV_W - 1, dr),
+                                     cfg.activation_dtype))
+
+
+def rglru_state_spec(cfg, batch: int) -> RGLRUState:
+    dr = cfg.rnn_width
+    sds = jax.ShapeDtypeStruct
+    return RGLRUState(h=sds((batch, dr), jnp.float32),
+                      conv=sds((batch, _CONV_W - 1, dr),
+                               cfg.activation_dtype))
+
+
+def _causal_conv(p, u, prev):
+    """Width-4 causal depthwise conv.  u: (B,S,dr), prev: (B,3,dr)."""
+    full = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    acc = p["conv_b"].astype(u.dtype)
+    s = u.shape[1]
+    out = sum(full[:, i:i + s, :] * p["conv_w"][i].astype(u.dtype)
+              for i in range(_CONV_W))
+    return out + acc
+
+
+def _rg_lru_scan(p, u):
+    """Associative-scan RG-LRU over u: (B,S,dr) -> (h_seq, h_last)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(uf, p["w_a"].astype(jnp.float32))
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(uf, p["w_x"].astype(jnp.float32))
+                       + p["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq, h_seq = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h_seq, h_seq[:, -1, :]
+
+
+def _rg_lru_step(p, u, h):
+    """Single decode step.  u: (B,1,dr), h: (B,dr) -> (out, h')."""
+    uf = u[:, 0, :].astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(uf, p["w_a"].astype(jnp.float32))
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(uf, p["w_x"].astype(jnp.float32))
+                       + p["b_x"].astype(jnp.float32))
+    a = jnp.exp(-_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r)
+    h = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return h[:, None, :], h
+
+
+def apply_rglru(p, x, cfg, state: Optional[RGLRUState]
+                ) -> Tuple[jnp.ndarray, RGLRUState]:
+    """Full Griffin recurrent mixer.  x: (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    if state is None:
+        state = init_rglru_state(cfg, b)
+
+    u_in = dense(x, p["w_branch"])
+    u_in = shard(u_in, "batch", None, "model")
+    gate = gelu(dense(x, p["w_gate_branch"]))
+    u = _causal_conv(p, u_in, state.conv)
+
+    if s == 1:
+        h_seq, h_last = _rg_lru_step(p, u, state.h)
+    else:
+        h_seq, h_last = _rg_lru_scan(p, u)
+
+    new_conv = jnp.concatenate(
+        [state.conv.astype(x.dtype), u_in], axis=1)[:, -(_CONV_W - 1):, :]
+    y = dense(h_seq.astype(x.dtype) * gate, p["w_out"])
+    return (shard(y, "batch", None, None),
+            RGLRUState(h=h_last, conv=new_conv))

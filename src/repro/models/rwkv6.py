@@ -1,0 +1,242 @@
+"""RWKV-6 ("Finch") time-mix and channel-mix blocks — attention-free,
+data-dependent per-channel decay [arXiv:2404.05892].
+
+Time-mix recurrence per head (head size cfg.rwkv_head_dim):
+    out_t = r_t . (S_t + (u * k_t) x v_t)
+    S_t+1 = diag(w_t) S_t + k_t x v_t
+with w_t = exp(-exp(w0 + lora_w(x_w))) the data-dependent decay, and the
+r/k/v/w/g inputs produced by data-dependent token-shift interpolation
+(ddlerp) between x_t and x_{t-1}.
+
+The baseline sequence path is a lax.scan carrying S (B,H,Dh,Dh) — O(1)
+memory, exactly the published recurrence.  kernels-level chunked form is a
+documented §Perf optimization (EXPERIMENTS.md).  Decode carries (S, last_x)
+— O(1) state, which is what makes the long_500k cell runnable.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense, ninit, shard
+
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray        # (B, H, Dh, Dh) wkv state
+    x_time: jnp.ndarray   # (B, d) previous token input (time-mix shift)
+    x_chan: jnp.ndarray   # (B, d) previous token input (channel-mix shift)
+
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    lora, lora_w = cfg.rwkv_lora, cfg.rwkv_lora * 2
+    ks = iter(jax.random.split(key, 32))
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        # ddlerp: shared mu_x + per-stream mu / LoRA pairs
+        "mu_x": jnp.zeros((d,), cfg.param_dtype),
+        "lora_a": ninit(next(ks), (d, 5 * lora), sc, cfg.param_dtype),
+        "lora_b": ninit(next(ks), (5, lora, d), 0.01, cfg.param_dtype),
+    }
+    for m in _MIX:
+        p[f"mu_{m}"] = jnp.zeros((d,), cfg.param_dtype)
+    p.update({
+        "w_r": ninit(next(ks), (d, d), sc, cfg.param_dtype),
+        "w_k": ninit(next(ks), (d, d), sc, cfg.param_dtype),
+        "w_v": ninit(next(ks), (d, d), sc, cfg.param_dtype),
+        "w_g": ninit(next(ks), (d, d), sc, cfg.param_dtype),
+        "w_o": ninit(next(ks), (d, d), sc, cfg.param_dtype),
+        # decay: w0 bias + LoRA; init so decay starts ~exp(-exp(-5)) ~ .993
+        "w0": jnp.full((d,), -5.0, cfg.param_dtype),
+        "wa": ninit(next(ks), (d, lora_w), sc, cfg.param_dtype),
+        "wb": ninit(next(ks), (lora_w, d), 0.01, cfg.param_dtype),
+        "u": ninit(next(ks), (h, dh), 0.5, cfg.param_dtype),
+        "ln_scale": jnp.ones((d,), cfg.param_dtype),
+        # channel mix
+        "c_mu_k": jnp.zeros((d,), cfg.param_dtype),
+        "c_mu_r": jnp.zeros((d,), cfg.param_dtype),
+        "c_wk": ninit(next(ks), (d, ff), sc, cfg.param_dtype),
+        "c_wv": ninit(next(ks), (ff, d), 1.0 / math.sqrt(ff), cfg.param_dtype),
+        "c_wr": ninit(next(ks), (d, d), sc, cfg.param_dtype),
+    })
+    return p
+
+
+def init_rwkv_state(cfg, batch: int) -> RWKVState:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    return RWKVState(
+        s=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        x_time=jnp.zeros((batch, d), cfg.activation_dtype),
+        x_chan=jnp.zeros((batch, d), cfg.activation_dtype),
+    )
+
+
+def rwkv_state_spec(cfg, batch: int) -> RWKVState:
+    d, dh = cfg.d_model, cfg.rwkv_head_dim
+    h = d // dh
+    sds = jax.ShapeDtypeStruct
+    return RWKVState(s=sds((batch, h, dh, dh), jnp.float32),
+                     x_time=sds((batch, d), cfg.activation_dtype),
+                     x_chan=sds((batch, d), cfg.activation_dtype))
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift interpolation -> dict of 5 mixed inputs."""
+    d = x.shape[-1]
+    base = x + (xx - x) * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(dense(base, p["lora_a"]))               # (..., 5*lora)
+    lo = lo.reshape(*lo.shape[:-1], 5, -1)
+    adj = jnp.einsum("...sr,srd->...sd", lo.astype(x.dtype),
+                     p["lora_b"].astype(x.dtype))          # (..., 5, d)
+    out = {}
+    for i, m in enumerate(_MIX):
+        mu = p[f"mu_{m}"].astype(x.dtype) + adj[..., i, :]
+        out[m] = x + (xx - x) * mu
+    return out
+
+
+def _group_norm(x, scale, h, dh, eps=1e-5):
+    """Per-head layer norm of the wkv output (RWKV's GroupNorm(h))."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], h, dh).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _wkv_step(s, r, k, v, w, u):
+    """One recurrence step.  s: (B,H,Dh,Dh); r,k,v,w: (B,H,Dh)."""
+    kv = k[..., :, None] * v[..., None, :]                # (B,H,Dh,Dh)
+    out = jnp.einsum("bhi,bhij->bhj", r, s + u[None, :, :, None] * kv)
+    s = w[..., :, None] * s + kv
+    return s, out
+
+
+_CHUNK = 16          # chunk length for the matmul-form WKV
+_LOG_W_FLOOR = -4.0  # per-step decay floor (exp(-4*16)=e^-64 stays in f32;
+                     # faster decays are numerically zero after 1-2 steps)
+
+
+def _wkv_chunked(s0, r, k, v, w_log, u, chunk: int = _CHUNK):
+    """Matmul-form WKV (GLA-style chunking) — the §Perf 'chunked' path.
+
+    Exact reformulation of the recurrence per chunk of length C:
+        out_t = (r_t*P_{t-1}) . S_0  +  sum_{tau<t} (r_t*P_{t-1}) .
+                (k_tau/P_tau) v_tau  +  (r_t . u*k_t) v_t
+        S_C   = diag(P_C) S_0 + sum_tau diag(P_C/P_tau) k_tau v_tau^T
+    with P_t the inclusive decay cumproduct.  Sequential length drops from
+    S steps to S/C steps and the inner work becomes MXU-shaped (C x Dh)
+    matmuls.  Validated against the scan implementation in
+    tests/test_rwkv_chunked.py.
+
+    Args: s0 (B,H,D,D) f32; r,k,v,w_log (S,B,H,D) f32 (w_log = log decay).
+    Returns (S_final, out (S,B,H,D)).
+    """
+    s_len, b, h, d = r.shape
+    pad = (-s_len) % chunk
+    if pad:
+        z = jnp.zeros((pad, b, h, d), r.dtype)
+        r, k, v = (jnp.concatenate([x, z]) for x in (r, k, v))
+        w_log = jnp.concatenate([w_log, jnp.zeros((pad, b, h, d))])
+    n = r.shape[0] // chunk
+
+    def to_chunks(x):
+        return x.reshape(n, chunk, b, h, d).transpose(0, 2, 3, 1, 4)
+
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)   # (N,B,H,C,D)
+    wl = to_chunks(jnp.maximum(w_log, _LOG_W_FLOOR))
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # strict causal
+
+    def body(s, inp):
+        rt, kt, vt, wlt = inp                                # (B,H,C,D)
+        lp = jnp.cumsum(wlt, axis=2)                         # logP_t (incl.)
+        lp_prev = lp - wlt                                   # logP_{t-1}
+        r_dec = rt * jnp.exp(lp_prev)                        # r_t * P_{t-1}
+        k_dec = kt * jnp.exp(-lp)                            # k_tau / P_tau
+        # intra-chunk attention-like term
+        scores = jnp.einsum("bhtd,bhsd->bhts", r_dec, k_dec)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        intra = jnp.einsum("bhts,bhsd->bhtd", scores, vt)
+        diag = jnp.einsum("bhtd,bhtd->bht", rt, u[None, :, None, :] * kt)
+        intra = intra + diag[..., None] * vt
+        # inter-chunk term from the carried state
+        inter = jnp.einsum("bhtd,bhdj->bhtj", r_dec, s)
+        out = inter + intra
+        # state update
+        lp_c = lp[:, :, -1:, :]                              # logP_C
+        k_fin = kt * jnp.exp(lp_c - lp)                      # k_tau*P_C/P_tau
+        s = jnp.exp(lp_c[:, :, 0, :, None]) * s + \
+            jnp.einsum("bhtd,bhtj->bhdj", k_fin, vt)
+        return s, out
+
+    s_final, outs = jax.lax.scan(body, s0, (rc, kc, vc, wl))
+    out = outs.transpose(0, 3, 1, 2, 4).reshape(n * chunk, b, h, d)
+    return s_final, out[:s_len]
+
+
+def time_mix(p, x, cfg, state: Optional[RWKVState]
+             ) -> Tuple[jnp.ndarray, RWKVState]:
+    """RWKV6 attention substitute.  x: (B,S,d)."""
+    b, s_len, d = x.shape
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+
+    if state is None:
+        state = init_rwkv_state(cfg, b)
+    xx = jnp.concatenate([state.x_time[:, None, :], x[:, :-1, :]], axis=1)
+    mixed = _ddlerp(p, x, xx)
+
+    r = dense(mixed["r"], p["w_r"]).reshape(b, s_len, h, dh)
+    k = dense(mixed["k"], p["w_k"]).reshape(b, s_len, h, dh)
+    v = dense(mixed["v"], p["w_v"]).reshape(b, s_len, h, dh)
+    g = jax.nn.silu(dense(mixed["g"], p["w_g"]))
+    w_log = -jnp.exp(p["w0"].astype(jnp.float32)
+                     + dense(jnp.tanh(dense(mixed["w"], p["wa"])),
+                             p["wb"]).astype(jnp.float32))
+    w = jnp.exp(w_log).reshape(b, s_len, h, dh)            # decay in (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    rf = r.astype(jnp.float32).transpose(1, 0, 2, 3)       # (S,B,H,Dh)
+    kf = k.astype(jnp.float32).transpose(1, 0, 2, 3)
+    vf = v.astype(jnp.float32).transpose(1, 0, 2, 3)
+    wf = w.transpose(1, 0, 2, 3)
+
+    if cfg.rwkv_impl == "chunked" and s_len > 1:
+        wl = w_log.reshape(b, s_len, h, dh).transpose(1, 0, 2, 3)
+        s_final, outs = _wkv_chunked(state.s, rf, kf, vf, wl, u)
+    else:
+        def body(s_carry, inp):
+            rt, kt, vt, wt = inp
+            s_carry, out = _wkv_step(s_carry, rt, kt, vt, wt, u)
+            return s_carry, out
+
+        s_final, outs = jax.lax.scan(body, state.s, (rf, kf, vf, wf))
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s_len, d)  # (B,S,d)
+    out = _group_norm(out, p["ln_scale"], h, dh).astype(x.dtype)
+    y = dense(out * g.astype(out.dtype), p["w_o"]).astype(x.dtype)
+    new_state = RWKVState(s=s_final, x_time=x[:, -1, :], x_chan=state.x_chan)
+    return shard(y, "batch", None, None), new_state
+
+
+def channel_mix(p, x, cfg, state: RWKVState) -> Tuple[jnp.ndarray, RWKVState]:
+    """RWKV6 FFN substitute with token shift.  x: (B,S,d)."""
+    xx = jnp.concatenate([state.x_chan[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (xx - x) * p["c_mu_k"].astype(x.dtype)
+    xr = x + (xx - x) * p["c_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(xk, p["c_wk"])))
+    k = shard(k, "batch", None, "model")
+    r = jax.nn.sigmoid(dense(xr, p["c_wr"]))
+    y = r * dense(k, p["c_wv"])
+    return shard(y, "batch", None, None), state._replace(x_chan=x[:, -1, :])

@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw, AdamWState, Optimizer, global_norm
+from repro.optim.schedule import wsd, cosine, constant
+
+__all__ = ["adamw", "AdamWState", "Optimizer", "global_norm", "wsd",
+           "cosine", "constant"]

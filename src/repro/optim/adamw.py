@@ -1,0 +1,64 @@
+"""AdamW with fp32 master weights + moments (bf16 model params)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: object     # fp32 param copies
+    m: object
+    v: object
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    """Returns (init, update); update(grads, state, params) -> (params', state')."""
+
+    def init(params) -> AdamWState:
+        f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+        zeros = lambda t: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return AdamWState(jnp.zeros((), jnp.int32), f32(params),
+                          zeros(params), zeros(params))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            gn = global_norm(g32)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        lr = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, g32)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
+                         state.v, g32)
+
+        def upd(master, mm, vv):
+            mhat = mm / b1c
+            vhat = vv / b2c
+            return master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                  + weight_decay * master)
+
+        master = jax.tree.map(upd, state.master, m, v)
+        new_params = jax.tree.map(
+            lambda mst, p: mst.astype(p.dtype), master, params)
+        return new_params, AdamWState(step, master, m, v)
+
+    return Optimizer(init, update)

@@ -1,0 +1,35 @@
+"""LR schedules: WSD (MiniCPM's warmup-stable-decay), cosine, linear."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        floor_frac: float = 0.1):
+    """Warmup-Stable-Decay [arXiv:2404.06395]."""
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = peak_lr * s / max(warmup, 1)
+        dec_t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * (1.0 - (1.0 - floor_frac) * dec_t)
+        return jnp.where(s < warmup, wu, jnp.where(s < warmup + stable,
+                                                   peak_lr, dec))
+
+    return fn
+
+
+def cosine(peak_lr: float, warmup: int, total: int,
+           floor_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, wu, peak_lr * cos)
+
+    return fn
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)

@@ -1,0 +1,3 @@
+from repro.roofline.hlo import collective_bytes_from_text, while_trip_counts
+
+__all__ = ["collective_bytes_from_text", "while_trip_counts"]

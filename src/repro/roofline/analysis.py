@@ -1,0 +1,199 @@
+"""Roofline analysis: three terms per (arch x shape) cell from the dry-run.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16     = 197 TFLOP/s
+    HBM bandwidth = 819 GB/s
+    ICI link      = ~50 GB/s
+
+Terms (seconds, per step, all per-chip — the dry-run's cost_analysis and
+HLO collective parse are per-device SPMD numbers):
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes / HBM_bw
+    collective = wire_bytes / link_bw   (ring factors: AR x2, AG/RS/A2A x1)
+
+HLO_FLOPs/bytes come from the *costing* compiles (scan bodies unrolled at
+depth 1 and 2, linearly extrapolated to full depth — XLA's cost analysis
+counts while bodies once, measured in EXPERIMENTS.md §Dry-run).  The RWKV
+time-scan stays sequential even in costing compiles; its recurrence FLOPs
+are added analytically (exact op count of the step body).
+
+MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (prefill/decode), with
+N_active excluding embeddings and counting only routed-active experts.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+# --------------------------------------------------------------------------
+# analytic model flops
+# --------------------------------------------------------------------------
+
+def _param_counts(cfg):
+    """(total, active_nonembed) parameter counts from the config."""
+    import jax
+    from repro.models import lm
+    sds = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    total = sum(int(math.prod(x.shape)) for x in jax.tree.leaves(sds))
+    embed = cfg.padded_vocab * cfg.d_model
+    if not cfg.tie_embeddings:
+        embed *= 2
+    nonembed = total - embed
+    if cfg.num_experts > 0:
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.num_experts \
+            * cfg.num_layers
+        active = 3 * cfg.d_model * cfg.d_ff * cfg.top_k * cfg.num_layers
+        nonembed = nonembed - expert + active
+    return total, nonembed
+
+
+def model_flops(cfg, shape, n_tokens: Optional[int] = None) -> float:
+    """6*N*D train / 2*N*D inference (global, all chips)."""
+    _, n_active = _param_counts(cfg)
+    if shape.mode == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.mode == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    toks = shape.global_batch * 1
+    return 2.0 * n_active * toks
+
+
+def rwkv_scan_flops(cfg, shape) -> float:
+    """Analytic WKV recurrence FLOPs (global) missed by costing compiles."""
+    if "rwkv" not in cfg.layer_pattern:
+        return 0.0
+    dh = cfg.rwkv_head_dim
+    h = cfg.d_model // dh
+    toks = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                 else 1)
+    per_tok_layer = 7.0 * h * dh * dh          # kv, u*kv, r., w*S, +
+    mult = 3.0 if shape.mode == "train" else 1.0   # fwd+bwd(~2x)
+    return per_tok_layer * toks * cfg.num_layers * mult
+
+
+# --------------------------------------------------------------------------
+# record analysis
+# --------------------------------------------------------------------------
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    note: str
+
+
+def wire_bytes(coll: Dict[str, float]) -> float:
+    """Ring-factor-weighted wire bytes from the per-category parse."""
+    return (2.0 * coll.get("all-reduce", 0.0)
+            + coll.get("all-gather", 0.0)
+            + coll.get("reduce-scatter", 0.0)
+            + coll.get("all-to-all", 0.0)
+            + coll.get("collective-permute", 0.0))
+
+
+def analyze_record(rec: dict, cfg=None) -> RooflineRow:
+    from repro.configs.base import SHAPES
+    from repro.models import registry
+    cfg = cfg or registry.get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+
+    costing = rec.get("costing") or {}
+    cost = costing.get("cost") or rec["cost"]
+    coll = costing.get("collectives") or {
+        k: v for k, v in rec["collectives"].items() if k != "counts"}
+
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    flops_dev += rwkv_scan_flops(cfg, shape) / n_dev
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_bytes(coll) / LINK_BW
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / n_dev
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+
+    note = _note(bottleneck, rec, useful)
+    return RooflineRow(rec["arch"], rec["shape"], compute_s, memory_s,
+                       collective_s, bottleneck, mf_dev, flops_dev, useful,
+                       note)
+
+
+def _note(bottleneck: str, rec: dict, useful: float) -> str:
+    if bottleneck == "collective":
+        return ("shrink resharding traffic: fewer all-gathers per layer "
+                "(sequence-parallel k/v, compressed DP all-reduce)")
+    if bottleneck == "memory":
+        return ("raise arithmetic intensity: larger per-chip batch, fuse "
+                "elementwise chains, bf16 cache reads")
+    if useful < 0.5:
+        return "cut redundant compute: remat policy / attention masking"
+    return "near compute roof: only kernel-level fusion is left"
+
+
+def roofline_fraction(row: RooflineRow) -> float:
+    """Achievable fraction of compute roof if terms overlap perfectly:
+    compute / max(all terms)."""
+    worst = max(row.compute_s, row.memory_s, row.collective_s)
+    return row.compute_s / worst if worst else 0.0
+
+
+def load_records(results_dir: str = RESULTS_DIR, mesh: str = "single"):
+    out = []
+    if not os.path.isdir(results_dir):
+        return out
+    for fn in sorted(os.listdir(results_dir)):
+        if fn.endswith(f"__{mesh}.json"):
+            with open(os.path.join(results_dir, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def markdown_table(rows: List[RooflineRow]) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "bottleneck | roofline frac | 6ND/HLO | next move |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r.arch} | {r.shape} | {r.compute_s * 1e3:.2f} | "
+                 f"{r.memory_s * 1e3:.2f} | {r.collective_s * 1e3:.2f} | "
+                 f"**{r.bottleneck}** | {roofline_fraction(r):.2f} | "
+                 f"{r.useful_ratio:.2f} | {r.note} |\n")
+    return hdr + body
+
+
+def main():
+    from repro.models import registry
+    recs = load_records()
+    rows = [analyze_record(r) for r in recs]
+    print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

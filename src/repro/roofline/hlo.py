@@ -1,0 +1,71 @@
+"""HLO-text parsing: collective byte accounting for the roofline.
+
+cost_analysis() has no collective term, so we parse the compiled module:
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute contributes its result-tensor bytes to its category.
+Ring-algorithm wire factors (x2(N-1)/N for all-reduce, (N-1)/N for
+gather/scatter) are applied separately by the roofline so both raw and
+effective numbers are visible.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_text(hlo: str) -> Dict[str, float]:
+    """Sum result bytes per collective category over an HLO module dump."""
+    out = defaultdict(float)
+    counts = defaultdict(int)
+    for m in _OP_RE.finditer(hlo):
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            nbytes = sum(_shape_bytes(dt, dm)
+                         for dt, dm in _TUPLE_ELEM_RE.findall(tuple_body))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        # -start/-done pairs would double count: only count -start or plain
+        if "-done(" in m.group(0):
+            continue
+        out[kind] += nbytes
+        counts[kind] += 1
+    rec = {k: float(v) for k, v in out.items()}
+    rec["total"] = float(sum(out.values()))
+    rec["counts"] = dict(counts)
+    return rec
+
+
+def while_trip_counts(hlo: str) -> Dict[str, int]:
+    """Best-effort trip counts of while loops (scan over layer groups)."""
+    # XLA annotates: while(...), ... trip_count=N in backend_config or
+    # induction-variable comments; fall back to empty.
+    out = {}
+    for m in re.finditer(r'"known_trip_count":\{"n":"(\d+)"\}', hlo):
+        out[f"while_{len(out)}"] = int(m.group(1))
+    return out

@@ -1,0 +1,80 @@
+"""Serving engine: batched prefill + greedy decode over jit'd steps.
+
+Prefill builds per-layer caches from a prompt batch, pads them out to
+``max_len`` slots (global layers; local layers keep their ring window),
+then the decode loop appends one token per step.  serve_step == one
+decode_step — the function the decode_* dry-run shapes lower.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.attention import KVCache
+
+
+def pad_caches(caches, max_len: int):
+    """Grow every KVCache to ``max_len`` slots (rings stay window-sized)."""
+
+    def pad_kv(c):
+        if not isinstance(c, KVCache):
+            return c                    # recurrent states carry no seq dim
+        s = c.k.shape[-3]
+        if s >= max_len:
+            return c
+        # ring caches (local layers) keep their size; only full caches grow.
+        pad = max_len - s
+        widths_kv = [(0, 0)] * c.k.ndim
+        widths_kv[-3] = (0, pad)
+        widths_pos = [(0, 0)] * c.pos.ndim
+        widths_pos[-1] = (0, pad)
+        return KVCache(
+            k=jnp.pad(c.k, widths_kv),
+            v=jnp.pad(c.v, widths_kv),
+            pos=jnp.pad(c.pos, widths_pos, constant_values=-1),
+            next_pos=c.next_pos,
+        )
+
+    return jax.tree.map(pad_kv, caches,
+                        is_leaf=lambda x: isinstance(x, KVCache))
+
+
+def is_ring(cfg, kind: str) -> bool:
+    return kind == "local"
+
+
+class ServeEngine:
+    """Greedy batched generation for any registered arch."""
+
+    def __init__(self, cfg, params, max_len: int = 4096):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(partial(lm.prefill, cfg=cfg))
+        self._decode = jax.jit(partial(lm.decode_step, cfg=cfg))
+
+    def generate(self, batch: Dict[str, jnp.ndarray], steps: int,
+                 collect_logits: bool = False):
+        """Returns generated tokens (B, steps) [+ final logits]."""
+        logits, caches = self._prefill(self.params, batch=batch)
+        caches = pad_caches(caches, self.max_len)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        outs = [tok]
+        last_logits = logits
+        for _ in range(steps - 1):
+            tok, last_logits, caches = self._decode(self.params, tokens=tok,
+                                                    caches=caches)
+            outs.append(tok)
+        tokens = jnp.concatenate(outs, axis=1)
+        if collect_logits:
+            return tokens, last_logits
+        return tokens
+
+
+def serve_step(params, cfg, tokens, caches):
+    """The decode-shape dry-run entry point (one new token, big cache)."""
+    return lm.decode_step(params, cfg, tokens, caches)

@@ -1,0 +1,23 @@
+"""Training state container."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: AdamWState
+    err: Any               # gradient-compression error feedback (or None-like)
+
+
+def init_state(params, optimizer, grad_compress: bool) -> TrainState:
+    err = (jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+           if grad_compress else None)
+    return TrainState(jnp.zeros((), jnp.int32), params,
+                      optimizer.init(params), err)

@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA device-count forcing here — smoke tests
+and benches must see the real single CPU device; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (see test_dryrun_small.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def smooth_field():
+    rng = np.random.default_rng(0)
+    ny, nx = 96, 128
+    y, x = np.meshgrid(np.linspace(0, 4 * np.pi, ny),
+                       np.linspace(0, 4 * np.pi, nx), indexing="ij")
+    f = np.sin(x) * np.cos(y) + 0.1 * rng.standard_normal((ny, nx))
+    return f.astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def noisy_field():
+    rng = np.random.default_rng(1)
+    return rng.standard_normal((64, 80)).astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def vortex():
+    from repro.data.fields import vortex_field
+    return vortex_field(128, 160, n_vortices=50, seed=3)

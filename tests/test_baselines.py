@@ -1,0 +1,47 @@
+"""Baseline compressors behave like their classes (paper Table II)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import (sz_lorenzo2d_compress,
+                                  sz_lorenzo2d_decompress, topo_iter_compress,
+                                  topo_iter_decompress, zfp_like_compress,
+                                  zfp_like_decompress)
+from repro.core.metrics import false_cases_host, max_abs_error
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-3])
+def test_sz_lorenzo_bound_and_monotone_class(smooth_field, eb):
+    f = jnp.asarray(smooth_field)
+    c = sz_lorenzo2d_compress(f, eb)
+    r = sz_lorenzo2d_decompress(c, f.shape, eb)
+    assert float(max_abs_error(f, r)) <= eb * (1 + 1e-5)
+    fc = false_cases_host(f, r)
+    assert fc["FP"] == 0 and fc["FT"] == 0     # monotone per-value class
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-3])
+def test_zfp_like_bound(smooth_field, eb):
+    f = jnp.asarray(smooth_field)
+    c = zfp_like_compress(f, eb)
+    r = zfp_like_decompress(c, f.shape, eb)
+    assert float(max_abs_error(f, r)) <= eb * (1 + 1e-4)
+
+
+def test_zfp_like_produces_fp(vortex):
+    """Transform coders are not monotone: they create false positives,
+    which is exactly the paper's Table II observation for ZFP."""
+    f = jnp.asarray(vortex)
+    c = zfp_like_compress(f, 1e-2)
+    r = zfp_like_decompress(c, f.shape, 1e-2)
+    fc = false_cases_host(f, r)
+    assert fc["FP"] > 0
+
+
+def test_topo_iter_zero_false_cases(smooth_field):
+    f = jnp.asarray(smooth_field)
+    c = topo_iter_compress(f, 1e-2, max_iters=8)
+    r = topo_iter_decompress(c, f.shape, 1e-2)
+    fc = false_cases_host(f, r)
+    assert fc["total"] == 0
+    assert float(max_abs_error(f, r)) <= 1e-2 * (1 + 1e-5)

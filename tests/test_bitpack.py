@@ -1,0 +1,54 @@
+"""Bit-packing exactness: pack/unpack roundtrips over width sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack
+
+
+@pytest.mark.parametrize("k", [8, 31, 32])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pack_unpack_roundtrip(k, seed):
+    rng = np.random.default_rng(seed)
+    b = 64
+    widths = rng.integers(0, 33, b).astype(np.int32)
+    mags = np.zeros((b, k), np.uint32)
+    for i, w in enumerate(widths):
+        if w > 0:
+            mags[i] = rng.integers(0, 2 ** min(int(w), 32), k, dtype=np.uint64)
+    buf, offs, total = bitpack.pack_blocks(jnp.asarray(mags),
+                                           jnp.asarray(widths))
+    out = bitpack.unpack_blocks(buf, jnp.asarray(widths), k)
+    assert np.array_equal(np.asarray(out), mags)
+    # compressed size matches the width accounting exactly
+    expect = int(sum((k * int(w) + 7) // 8 for w in widths))
+    assert int(total) == expect
+
+
+def test_zero_width_blocks_cost_nothing():
+    b, k = 16, 31
+    mags = jnp.zeros((b, k), jnp.uint32)
+    widths = jnp.zeros((b,), jnp.int32)
+    _, _, total = bitpack.pack_blocks(mags, widths)
+    assert int(total) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255), st.integers(1, 64))
+def test_bits_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    packed = bitpack.pack_bits(jnp.asarray(bits))
+    out = bitpack.unpack_bits(packed, n)
+    assert np.array_equal(np.asarray(out), bits)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 255), st.integers(1, 64))
+def test_2bit_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 4, n).astype(np.int32)
+    packed = bitpack.pack_2bit(jnp.asarray(vals))
+    out = bitpack.unpack_2bit(packed, n)
+    assert np.array_equal(np.asarray(out), vals)

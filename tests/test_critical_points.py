@@ -1,0 +1,70 @@
+"""CD-stage tests: classification semantics + edge handling."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.critical_points import (MAXIMA, MINIMA, REGULAR, SADDLE,
+                                        classify, count_labels,
+                                        neighbor_min_max)
+
+
+def test_single_maximum():
+    f = jnp.asarray(np.array([[0, 0, 0], [0, 5, 0], [0, 0, 0]], np.float32))
+    lab = classify(f)
+    assert int(lab[1, 1]) == MAXIMA
+
+
+def test_single_minimum():
+    f = jnp.asarray(np.array([[1, 1, 1], [1, -5, 1], [1, 1, 1]], np.float32))
+    lab = classify(f)
+    assert int(lab[1, 1]) == MINIMA
+
+
+def test_saddle():
+    # t,d higher; l,r lower
+    f = jnp.asarray(np.array([[9, 5, 9], [1, 3, 1], [9, 5, 9]], np.float32))
+    lab = classify(f)
+    assert int(lab[1, 1]) == SADDLE
+
+
+def test_flat_is_regular():
+    f = jnp.zeros((5, 7))
+    assert bool(jnp.all(classify(f) == REGULAR))
+
+
+def test_corner_extrema_use_available_neighbors():
+    f = jnp.asarray(np.array([[5, 1], [1, 0]], np.float32))
+    lab = classify(f)
+    assert int(lab[0, 0]) == MAXIMA      # 2-neighbor corner max
+    assert int(lab[1, 1]) == MINIMA
+
+
+def test_paper_fig2_flattening():
+    """Center 0.012 vs neighbors 0.01 is a maximum; quantization at
+    eps=0.01 flattens it (FN) — the paper's motivating example."""
+    from repro.core.quantize import quantize_roundtrip
+    f = np.full((3, 3), 0.01, np.float32)
+    f[1, 1] = 0.012
+    f = jnp.asarray(f)
+    assert int(classify(f)[1, 1]) == MAXIMA
+    rec = quantize_roundtrip(f, 0.01)
+    assert int(classify(rec)[1, 1]) == REGULAR
+
+
+def test_neighbor_min_max_edges():
+    f = jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 4))
+    nmin, nmax = neighbor_min_max(f)
+    assert float(nmin[0, 0]) == 1.0       # right neighbor
+    assert float(nmax[0, 0]) == 4.0       # down neighbor
+    assert float(nmax[2, 3]) == 10.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_kernel_matches_core(seed):
+    """Pallas cp_detect kernel == core classify on random fields."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    ny, nx = rng.integers(3, 40), rng.integers(3, 40)
+    f = jnp.asarray(rng.standard_normal((ny, nx)).astype(np.float32))
+    assert bool(jnp.all(ops.cp_detect(f, backend="interpret") == classify(f)))

@@ -1,0 +1,70 @@
+"""Quantizer unit + property tests (paper Sec. II-C / III-B invariants)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import dequantize, quantize, quantize_roundtrip
+
+EBS = [1e-1, 1e-2, 1e-3, 1e-4]
+
+
+def _tol(eb, xmax):
+    """eb plus float32 ULP slop (the C reference uses doubles internally;
+    our x32-only JAX build carries a few-ULP slop at |x| >> eb)."""
+    return eb + 4 * float(np.spacing(np.float32(xmax + eb)))
+
+
+@pytest.mark.parametrize("eb", EBS)
+def test_error_bound_center(eb):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(10000).astype(np.float32))
+    err = jnp.abs(quantize_roundtrip(x, eb) - x)
+    assert float(err.max()) <= _tol(eb, float(jnp.abs(x).max()))
+
+
+def test_paper_example_fig2():
+    # paper Fig 2: eps=0.01, values 0.012 and 0.01 land in the same bin
+    eb = 0.01
+    q = quantize(jnp.array([0.012, 0.01, 0.01, 0.01, 0.01]), eb)
+    assert len(set(np.asarray(q).tolist())) == 1   # all flattened to one bin
+
+
+def test_monotone():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.sort(rng.standard_normal(5000)).astype(np.float32))
+    q = quantize(x, 1e-3)
+    assert bool(jnp.all(jnp.diff(q) >= 0))
+    r = dequantize(q, 1e-3)
+    assert bool(jnp.all(jnp.diff(r) >= 0))
+
+
+def test_left_mode_bound_is_2eb():
+    """The paper's literal reconstruction formula only bounds by 2 eps."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(10000).astype(np.float32))
+    eb = 1e-2
+    err = jnp.abs(quantize_roundtrip(x, eb, recon="left") - x)
+    assert float(err.max()) <= 2 * eb + 1e-8
+    assert float(err.max()) > eb          # and it genuinely exceeds eps
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+       st.sampled_from(EBS))
+def test_property_pointwise_bound(val, eb):
+    # |x|/eb must stay below 2^24 for a float32 code path to be exact;
+    # the ULP-aware tolerance covers the representability slop.
+    x = jnp.float32(val)
+    r = quantize_roundtrip(x, eb)
+    assert abs(float(r) - float(x)) <= _tol(eb, abs(float(x)))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=2, max_size=50), st.sampled_from([1e-2, 1e-3]))
+def test_property_order_preserved(vals, eb):
+    """Monotonicity: a1 < a2 => a1_hat <= a2_hat (no FP/FT mechanism)."""
+    x = jnp.asarray(sorted(vals), jnp.float32)
+    r = quantize_roundtrip(x, eb)
+    assert bool(jnp.all(jnp.diff(r) >= 0))

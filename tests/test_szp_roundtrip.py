@@ -1,0 +1,58 @@
+"""SZp end-to-end: error bound, code roundtrip exactness, serialization."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import io as cio
+from repro.core.szp import (compress_codes, decompress_codes, szp_compress,
+                            szp_decompress, szp_roundtrip)
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-3, 1e-4])
+@pytest.mark.parametrize("shape", [(96, 128), (61, 77), (1, 257)])
+def test_szp_error_bound(eb, shape, smooth_field):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    rec, parts = szp_roundtrip(x, eb)
+    tol = eb + 4 * float(np.spacing(np.float32(float(jnp.abs(x).max()) + eb)))
+    assert float(jnp.abs(rec - x).max()) <= tol
+    assert int(parts.nbytes) > 0
+
+
+def test_codes_lossless_roundtrip():
+    rng = np.random.default_rng(3)
+    codes = jnp.asarray(rng.integers(-2 ** 28, 2 ** 28, 4096, dtype=np.int64)
+                        .astype(np.int32))
+    parts = compress_codes(codes)
+    out = decompress_codes(parts, 4096)
+    assert bool(jnp.all(out == codes))
+
+
+def test_smooth_field_compresses_well(smooth_field):
+    rec, parts = szp_roundtrip(jnp.asarray(smooth_field), 1e-2)
+    ratio = 4 * smooth_field.size / int(parts.nbytes)
+    assert ratio > 3.0, f"smooth field should compress >3x, got {ratio}"
+
+
+def test_serialize_roundtrip(smooth_field):
+    f = jnp.asarray(smooth_field)
+    eb = 1e-3
+    parts = szp_compress(f, eb)
+    blob = cio.serialize_szp(parts, f.shape, eb)
+    parts2, shape, eb2, block = cio.deserialize_szp(blob)
+    rec1 = szp_decompress(parts, tuple(f.shape), eb)
+    rec2 = szp_decompress(parts2, shape, eb2, block=block)
+    assert bool(jnp.all(rec1 == rec2))
+    # true on-disk size within a header of the jit-side accounting
+    assert abs(len(blob) - int(parts.nbytes)) <= 64
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1e-2, 1e-3]),
+       st.integers(2, 9))
+def test_property_roundtrip_bound(seed, eb, rows):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-5, 5, (rows, 33)).astype(np.float32))
+    rec, _ = szp_roundtrip(x, eb)
+    assert float(jnp.abs(rec - x).max()) <= eb * (1 + 1e-5)

@@ -1,0 +1,50 @@
+"""TopoSZp-3D extension: guarantees carry over to 3-D fields."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topo3d import (MAXIMA, MINIMA, classify3d, false_cases3d,
+                               toposzp3d_compress, toposzp3d_decompress)
+from repro.core.quantize import quantize_roundtrip
+from repro.core.szp import szp_roundtrip
+
+
+def _field3d(shape=(24, 28, 32), seed=0):
+    rng = np.random.default_rng(seed)
+    z, y, x = np.meshgrid(np.linspace(0, 3 * np.pi, shape[0]),
+                          np.linspace(0, 3 * np.pi, shape[1]),
+                          np.linspace(0, 3 * np.pi, shape[2]),
+                          indexing="ij")
+    f = (np.sin(x) * np.cos(y) * np.sin(z)
+         + 0.05 * rng.standard_normal(shape))
+    return jnp.asarray(f.astype(np.float32))
+
+
+def test_classify3d_extrema():
+    f = np.zeros((3, 3, 3), np.float32)
+    f[1, 1, 1] = 5.0
+    assert int(classify3d(jnp.asarray(f))[1, 1, 1]) == MAXIMA
+    f[1, 1, 1] = -5.0
+    assert int(classify3d(jnp.asarray(f))[1, 1, 1]) == MINIMA
+
+
+@pytest.mark.parametrize("eb", [1e-2, 1e-3])
+def test_3d_guarantees(eb):
+    f = _field3d()
+    comp = toposzp3d_compress(f, eb)
+    rec = toposzp3d_decompress(comp, f.shape, eb)
+    assert float(jnp.abs(rec - f).max()) <= 2 * eb * (1 + 1e-4)
+    fc = false_cases3d(f, rec)
+    assert fc["FP"] == 0 and fc["FT"] == 0
+
+    # FN reduction vs plain SZp on the same 3-D field
+    rec_szp, _ = szp_roundtrip(f, eb)
+    fc_szp = false_cases3d(f, rec_szp.reshape(f.shape))
+    if fc_szp["FN"] > 10:
+        assert fc["FN"] < fc_szp["FN"]
+
+
+def test_3d_ratio_positive():
+    f = _field3d(seed=3)
+    comp = toposzp3d_compress(f, 1e-3)
+    assert 4 * f.size / int(comp.nbytes) > 1.0

@@ -1,0 +1,91 @@
+"""TopoSZp system guarantees (paper Sec. III-B, IV-B, Table I/II):
+
+  * |out - orig| <= 2 eps (relaxed-but-strict bound)
+  * zero FP and zero FT on every input
+  * FN strictly reduced vs plain SZp
+  * compression ratio penalty stays bounded
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (false_cases_host, max_abs_error, szp_roundtrip,
+                        toposzp_roundtrip)
+from repro.core.metrics import psnr
+
+EBS = [1e-2, 1e-3]
+
+
+@pytest.mark.parametrize("eb", EBS)
+def test_relaxed_bound_and_no_fp_ft(smooth_field, eb):
+    f = jnp.asarray(smooth_field)
+    rec, comp = toposzp_roundtrip(f, eb)
+    assert float(max_abs_error(f, rec)) <= 2 * eb * (1 + 1e-5)
+    fc = false_cases_host(f, rec)
+    assert fc["FP"] == 0 and fc["FT"] == 0
+
+
+@pytest.mark.parametrize("eb", EBS)
+def test_fn_reduction_vs_szp(vortex, eb):
+    f = jnp.asarray(vortex)
+    rec_szp, _ = szp_roundtrip(f, eb)
+    rec_topo, _ = toposzp_roundtrip(f, eb)
+    fn_szp = false_cases_host(f, rec_szp)["FN"]
+    fn_topo = false_cases_host(f, rec_topo)["FN"]
+    if fn_szp > 0:
+        assert fn_topo < fn_szp, (fn_topo, fn_szp)
+        assert fn_topo <= fn_szp / 2, "expect >=2x fewer FN on smooth data"
+
+
+def test_noisy_field_still_guaranteed(noisy_field):
+    f = jnp.asarray(noisy_field)
+    eb = 5e-2
+    rec, _ = toposzp_roundtrip(f, eb)
+    fc = false_cases_host(f, rec)
+    assert fc["FP"] == 0 and fc["FT"] == 0
+    assert float(max_abs_error(f, rec)) <= 2 * eb * (1 + 1e-5)
+
+
+def test_psnr_not_destroyed(smooth_field):
+    f = jnp.asarray(smooth_field)
+    rec, _ = toposzp_roundtrip(f, 1e-3)
+    assert float(psnr(f, rec)) > 50.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 100_000), st.sampled_from([1e-2, 5e-3]))
+def test_property_guarantees_random_fields(seed, eb):
+    """FP=0, FT=0 and the 2-eps bound on arbitrary random fields."""
+    rng = np.random.default_rng(seed)
+    ny, nx = rng.integers(8, 48), rng.integers(8, 48)
+    kind = seed % 3
+    if kind == 0:
+        f = rng.standard_normal((ny, nx)).astype(np.float32)
+    elif kind == 1:
+        y, x = np.meshgrid(np.linspace(0, 6, ny), np.linspace(0, 6, nx),
+                           indexing="ij")
+        f = (np.sin(x) * np.cos(y)).astype(np.float32)
+    else:
+        f = (rng.standard_normal((ny, nx)) * 0.01).astype(np.float32)
+    f = jnp.asarray(f)
+    rec, _ = toposzp_roundtrip(f, eb)
+    fc = false_cases_host(f, rec)
+    assert fc["FP"] == 0, fc
+    assert fc["FT"] == 0, fc
+    assert float(max_abs_error(f, rec)) <= 2 * eb * (1 + 1e-4)
+
+
+def test_rank_order_restored_same_bin():
+    """Paper Fig 5: two maxima in one bin keep their order after topo
+    reconstruction (the RP metadata at work)."""
+    eb = 0.01
+    f = np.full((3, 7), 0.0, np.float32)
+    f[1, 1] = 0.012   # M1
+    f[1, 5] = 0.013   # M2 (same quantization bin as M1 at eps=0.01)
+    fj = jnp.asarray(f)
+    rec, _ = toposzp_roundtrip(fj, eb)
+    assert float(rec[1, 1]) < float(rec[1, 5]), "M1 < M2 ordering lost"
+    from repro.core.critical_points import MAXIMA, classify
+    lab = classify(rec)
+    assert int(lab[1, 1]) == MAXIMA and int(lab[1, 5]) == MAXIMA

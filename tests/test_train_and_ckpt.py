@@ -1,0 +1,104 @@
+"""Training loop, checkpoint/restart, preemption recovery, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import manager as ckpt
+from repro.data import token_batches
+from repro.models import lm, registry
+from repro.optim import adamw, constant, wsd
+from repro.train import (PreemptionError, init_state, make_train_step,
+                         train_loop)
+
+
+def _setup(arch="minicpm_2b", lr=3e-3):
+    cfg = registry.get_smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(constant(lr))
+    state = init_state(params, opt, grad_compress=False)
+    step = make_train_step(cfg, opt)
+    data = token_batches(cfg, 8, 32, seed=0)
+    return cfg, state, step, data
+
+
+def test_loss_decreases():
+    cfg, state, step, data = _setup()
+    state, rep = train_loop(state, step, data, num_steps=40,
+                            log=lambda *_: None)
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first - 0.05, (first, last)
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    cfg, state, step, data = _setup()
+    d = str(tmp_path / "ck")
+    state1, rep1 = train_loop(state, step, data, num_steps=20, ckpt_dir=d,
+                              ckpt_every=10, log=lambda *_: None)
+    # a fresh job restores and continues from step 20
+    cfg, state0, step2, data2 = _setup()
+    state2, rep2 = train_loop(state0, step2, data2, num_steps=25,
+                              ckpt_dir=d, ckpt_every=10,
+                              log=lambda *_: None)
+    assert rep2.restored_from == 20
+    assert rep2.steps_run == 5
+    assert int(state2.step) == 25
+
+
+def test_preemption_then_recovery(tmp_path):
+    cfg, state, step, data = _setup()
+    d = str(tmp_path / "ck")
+    with pytest.raises(PreemptionError):
+        train_loop(state, step, data, num_steps=30, ckpt_dir=d,
+                   ckpt_every=5, preempt_at=17, log=lambda *_: None)
+    # restart picks up from the last checkpoint (15), not from scratch
+    cfg, state0, step2, data2 = _setup()
+    state2, rep = train_loop(state0, step2, data2, num_steps=30, ckpt_dir=d,
+                             ckpt_every=5, log=lambda *_: None)
+    assert rep.restored_from == 15
+    assert int(state2.step) == 30
+
+
+def test_corrupt_checkpoint_falls_back(tmp_path):
+    cfg, state, step, data = _setup()
+    d = str(tmp_path / "ck")
+    state, rep = train_loop(state, step, data, num_steps=20, ckpt_dir=d,
+                            ckpt_every=10, log=lambda *_: None)
+    # corrupt the newest checkpoint's data file
+    newest = os.path.join(d, "step_00000020", "data.bin")
+    with open(newest, "r+b") as f:
+        f.seek(10)
+        f.write(b"\xde\xad\xbe\xef")
+    restored = ckpt.restore(d, state)
+    assert restored is not None
+    assert restored[1] == 10   # fell back to the previous checkpoint
+
+
+def test_szp_compressed_checkpoint(tmp_path):
+    """Space-saving error-bounded checkpoints honor the bound."""
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32)),
+            "step": jnp.int32(7)}
+    eb = 1e-4
+    path = ckpt.save(tree, 1, str(tmp_path / "c"), compress="szp", eb=eb)
+    out, step = ckpt.restore(str(tmp_path / "c"), tree)
+    assert step == 1
+    assert int(out["step"]) == 7
+    err = float(jnp.abs(out["w"] - tree["w"]).max())
+    xmax = float(jnp.abs(tree["w"]).max())
+    assert err <= eb + 4 * float(np.spacing(np.float32(xmax + eb)))
+    # compressed checkpoint is smaller than raw
+    raw = 128 * 64 * 4
+    size = os.path.getsize(os.path.join(path, "data.bin"))
+    assert size < raw
+
+
+def test_wsd_schedule_shape():
+    sched = wsd(1.0, warmup=10, stable=20, decay=10)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert float(sched(jnp.int32(10))) == 1.0
+    assert float(sched(jnp.int32(25))) == 1.0
+    assert float(sched(jnp.int32(40))) <= 0.11
