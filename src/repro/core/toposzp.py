@@ -22,8 +22,8 @@ from repro.core.quantize import dequantize, quantize
 from repro.core.rbf import refine_saddles
 from repro.core.relative_order import compute_ranks
 from repro.core.stencils import apply_extrema_stencils
-from repro.core.szp import (DEFAULT_BLOCK, SZpParts, compress_codes,
-                            decompress_codes)
+from repro.core.szp import (DEFAULT_BLOCK, HEADER_BYTES, SZpParts,
+                            compress_codes, decompress_codes)
 
 
 class TopoSZpCompressed(NamedTuple):
@@ -50,7 +50,6 @@ def _cp_first_order(labels_flat: jnp.ndarray) -> jnp.ndarray:
 def rank_stream_bytes(n_cp: jnp.ndarray, payload_nbytes: jnp.ndarray,
                       block: int = DEFAULT_BLOCK) -> jnp.ndarray:
     """Size of the sparse rank section: only the used block prefix."""
-    from repro.core.szp import HEADER_BYTES
     ub = (n_cp + block - 1) // block
     return (HEADER_BYTES + (ub + 7) // 8 + ub + (block * ub + 7) // 8
             + 4 * ub + payload_nbytes).astype(jnp.int32)

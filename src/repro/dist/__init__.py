@@ -1,0 +1,22 @@
+"""Distributed layer: sharding rules, compressed collectives, elasticity.
+
+``dist.sharding``    — NamedSharding rules for params / batches / caches
+``dist.collectives`` — error-bounded compressed gradient psum (+EF)
+``dist.elastic``     — largest-valid-mesh rebuild after device loss
+``dist.compat``      — shard_map shim across JAX versions
+"""
+from repro.dist import collectives, compat, elastic, sharding
+from repro.dist.collectives import (code_bits, compressed_psum_tree,
+                                    quantize_dequantize_sum)
+from repro.dist.compat import shard_map
+from repro.dist.elastic import largest_mesh_shape, rebuild_mesh
+from repro.dist.sharding import (batch_axes, cache_shardings, data_sharding,
+                                 param_shardings, replicated)
+
+__all__ = [
+    "collectives", "compat", "elastic", "sharding",
+    "code_bits", "compressed_psum_tree", "quantize_dequantize_sum",
+    "shard_map", "largest_mesh_shape", "rebuild_mesh",
+    "batch_axes", "cache_shardings", "data_sharding", "param_shardings",
+    "replicated",
+]

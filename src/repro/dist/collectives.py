@@ -1,0 +1,105 @@
+"""Error-bounded compressed gradient collectives (beyond-paper §Perf).
+
+The DP gradient all-reduce is the dominant wire cost of data-parallel
+training.  Here the paper's SZp linear quantizer (core/quantize) runs on
+the wire instead of on disk, in the spirit of hZCCL/TopoSZ homomorphic
+compressed collectives:
+
+  * every DP member quantizes its local gradient leaf with the SAME
+    absolute bound  eb = rel_eb * pmax(|g + err|)  (one scalar pmax per
+    leaf makes the codebooks identical across members),
+  * the all-reduce sums the int32 bin INDICES — summation commutes with
+    the linear dequantizer, so  dequant(sum q_i) == sum dequant(q_i)
+    exactly (the homomorphism), and the result differs from the direct
+    sum by at most  n_members * eb  per element,
+  * an error-feedback accumulator carries each member's local residual
+    ``(g + err) - dequant(q)`` into the next step, so the compression
+    error does not accumulate over training (EF-SGD).
+
+The wire width of the codes (vs 16-bit bf16 values) is what
+``code_bits`` accounts; benchmarks/bench_grad_compress.py reports the
+resulting byte reduction.  core/bitpack packs the codes for the on-disk
+format; on the wire the dry-run costs them at ``code_bits`` per value.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import dequantize, quantize
+from repro.utils import bitwidth
+
+AxisNames = Union[str, Sequence[str]]
+
+# eb floor: keeps all-zero leaves (fresh error feedback, frozen params)
+# from dividing by zero; anything at this scale quantizes to code 0.
+_EB_TINY = 1e-30
+
+
+def _leaf_eb(x: jnp.ndarray, rel_eb: float,
+             axes: Optional[AxisNames] = None) -> jnp.ndarray:
+    """Per-leaf absolute bound; pmax-shared so codebooks match across DP."""
+    scale = jnp.max(jnp.abs(x))
+    if axes:
+        scale = jax.lax.pmax(scale, axes)
+    return jnp.maximum(scale * rel_eb, _EB_TINY)
+
+
+def code_bits(g: jnp.ndarray, rel_eb: float) -> jnp.ndarray:
+    """Bits/value the quantized codes of ``g`` need (incl. sign bit)."""
+    g = g.astype(jnp.float32)
+    eb = _leaf_eb(g, rel_eb)
+    q = quantize(g, eb)
+    return bitwidth(jnp.max(jnp.abs(q)).astype(jnp.uint32)) + 1
+
+
+def quantize_dequantize_sum(xs: jnp.ndarray, rel_eb: float
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Homomorphic sum of ``xs[i]`` through the quantizer vs the direct sum.
+
+    xs: (n_members, ...) stacked per-member values.  Returns
+    ``(dequant(sum_i quant(xs[i])), sum_i xs[i])``; the two differ by at
+    most ``n_members * rel_eb * max|xs|`` per element.
+    """
+    xs = xs.astype(jnp.float32)
+    eb = _leaf_eb(xs, rel_eb)
+    q = quantize(xs, eb)
+    homo = dequantize(q.sum(axis=0), eb)
+    return homo, xs.sum(axis=0)
+
+
+def compressed_psum_tree(grads: Any, axes: AxisNames, rel_eb: float = 1e-3,
+                         err: Optional[Any] = None) -> Tuple[Any, Any]:
+    """Error-bounded compressed psum over a gradient pytree.
+
+    Must run inside a shard_map context where ``axes`` are manual mesh
+    axes.  Returns ``(mean gradient tree, new error-feedback tree)``; the
+    mean differs from the direct ``pmean`` by at most ``rel_eb *
+    pmax|g + err|`` per leaf element (n_members * eb summed, / n_members).
+    """
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+
+    def one(g: jnp.ndarray, e: Optional[jnp.ndarray]):
+        g32 = g.astype(jnp.float32)
+        ge = g32 if e is None else g32 + e.astype(jnp.float32)
+        eb = _leaf_eb(ge, rel_eb, axes)
+        q = quantize(ge, eb)
+        deq = dequantize(q, eb)
+        gbar = dequantize(jax.lax.psum(q, axes), eb) / n
+        new_e = ge - deq
+        return gbar.astype(g.dtype), new_e
+
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = ([None] * len(leaves_g) if err is None
+                else jax.tree.leaves(err))
+    pairs = [one(g, e) for g, e in zip(leaves_g, leaves_e)]
+    new_g = treedef.unflatten([p[0] for p in pairs])
+    if err is None:
+        new_e = treedef.unflatten([p[1] for p in pairs])
+    else:
+        new_e = treedef.unflatten([p[1].astype(e.dtype)
+                                   for p, e in zip(pairs, leaves_e)])
+    return new_g, new_e

@@ -1,0 +1,50 @@
+"""shard_map across JAX versions.
+
+The distributed layer is written against the modern ``jax.shard_map``
+surface (``axis_names=...`` selects the manual axes, ``check_vma``
+toggles the varying-manual-axes check).  Older JAX (<= 0.4.x, including
+the 0.4.37 this repo pins) only ships ``jax.experimental.shard_map`` with
+the inverse vocabulary: ``auto=frozenset(...)`` names the axes that STAY
+automatic and the check flag is ``check_rep``.  This module translates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+
+# Legacy partial-auto (auto=frozenset) is wired through below, but the XLA
+# shipped with 0.4.x fatally asserts (`Check failed: IsManualSubgroup()`)
+# when GSPMD re-partitions real model graphs inside a manual subgroup.
+# Callers that can degrade (e.g. the compressed-DP train step runs fully
+# manual, replicating model-axis compute per DP shard) should consult this.
+HAS_PARTIAL_AUTO = _NEW_SHARD_MAP is not None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = False):
+    """Version-portable shard_map.
+
+    ``axis_names``: mesh axes made manual inside ``f`` (None = all of
+    them).  ``check_vma=False`` disables the replication/VMA check, which
+    the compressed-DP step needs (error-feedback state is genuinely
+    device-varying).
+    """
+    if _NEW_SHARD_MAP is not None:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return _NEW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma,
+                              **kw)
+    from jax.experimental.shard_map import shard_map as _legacy
+    kw = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma, **kw)

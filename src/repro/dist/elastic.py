@@ -1,0 +1,46 @@
+"""Elastic mesh rebuilding: largest valid (data, model) mesh after device
+loss.
+
+When devices drop mid-job (preemption, hardware fault) the training loop
+rebuilds the largest mesh the surviving devices support and re-shards.
+The policy maximizes the number of devices actually used, breaking ties
+toward more model parallelism (keeping the memory-per-device budget):
+with 7 survivors and a requested model_parallel of 4, a (1, 4) mesh would
+idle 3 devices while (7, 1) uses all 7 — so (7, 1) wins.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from jax.sharding import Mesh
+
+
+def largest_mesh_shape(n_devices: int, model_parallel: int
+                       ) -> Tuple[int, int]:
+    """Largest (data, model) shape for ``n_devices`` with model parallel
+    at most ``model_parallel`` (reduced when it cannot be filled)."""
+    assert n_devices >= 1 and model_parallel >= 1
+    best = (1, 1)
+    best_used = 1
+    for mp in range(min(model_parallel, n_devices), 0, -1):
+        data = n_devices // mp
+        used = data * mp
+        if used > best_used:
+            best, best_used = (data, mp), used
+    return best
+
+
+def rebuild_mesh(devices: Sequence, model_parallel: int = 1) -> Mesh:
+    """Build the largest valid ('data', 'model') mesh from ``devices``.
+
+    Surplus devices that do not fill a full data row are left out (they
+    rejoin at the next rebuild); the device order is preserved so data
+    shards stay adjacent on the interconnect.
+    """
+    devices = list(devices)
+    data, model = largest_mesh_shape(len(devices), model_parallel)
+    grid = np.asarray(devices[: data * model], dtype=object).reshape(
+        data, model)
+    return Mesh(grid, ("data", "model"))

@@ -1,0 +1,211 @@
+"""NamedSharding rules for every model family (dense / MoE / ssm / hybrid).
+
+Parameters follow megatron column/row parallelism on the 'model' axis:
+fused attention projections shard their feature dim, FFN in/gate shard the
+hidden dim, out-projections shard their input dim, the embedding and LM
+head shard the (256-padded) vocab, and MoE expert stacks shard the expert
+dim (EP).  Under the fsdp strategy the remaining large dim additionally
+shards over the data axes (fully sharded params/optimizer; tiny tensors
+stay replicated).  Every rule is divisibility-guarded: an axis that does
+not divide the dim is dropped rather than padded.
+
+Activations/batches shard their leading dim over the pod-aware data axes
+('pod','data' on the multi-pod mesh), or over EVERY axis under fsdp
+(pure-DP activations); decode caches shard batch over data and the kv-head
+dim over 'model' when it divides.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaf names whose LAST dim is the sharded feature dim (column parallel)
+_COL = {
+    "w_q", "w_k", "w_v",              # attention fused projections
+    "w_in", "w_gate",                 # dense FFN (2-D)
+    "w_branch", "w_gate_branch",      # RG-LRU input branches
+    "w_a", "w_x",                     # RG-LRU recurrence gates
+    "w_r", "w_g",                     # RWKV time-mix projections
+    "c_wk", "c_wr",                   # RWKV channel-mix
+    "wa",                             # RWKV decay LoRA (down)
+    "lora_a",                         # RWKV ddlerp LoRA (down)
+}
+# leaf names whose FIRST (of the trailing two) dims is sharded (row parallel)
+_ROW = {"w_o", "w_out", "c_wv", "wb"}
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes carrying the data-parallel batch dim (pod-aware)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def replicated(x: Any, mesh) -> Any:
+    """Fully-replicated NamedSharding(s) matching the structure of ``x``."""
+    rep = NamedSharding(mesh, P())
+    if isinstance(x, (jnp.ndarray, jax.ShapeDtypeStruct)) or hasattr(x, "shape"):
+        return rep
+    return jax.tree.map(lambda _: rep, x)
+
+
+def _axes_size(mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _largest_dividing(mesh, candidates, dim: int) -> Optional[Tuple[str, ...]]:
+    """First candidate axis-tuple whose total size divides ``dim``."""
+    for axes in candidates:
+        axes = tuple(axes)
+        if axes and dim % _axes_size(mesh, axes) == 0:
+            return axes
+    return None
+
+
+def _batch_candidates(mesh, strategy: str):
+    names = tuple(mesh.axis_names)
+    if strategy == "fsdp":
+        full = names
+        cands = [full,
+                 tuple(a for a in full if a != "pod"),
+                 tuple(a for a in full if a != "model"),
+                 tuple(a for a in full if a not in ("pod", "model"))]
+        cands += [(a,) for a in full]
+        return cands
+    dp = batch_axes(mesh)
+    return [dp] + [(a,) for a in dp]
+
+
+def data_sharding(batch: Any, mesh, strategy: str = "tp") -> Any:
+    """Shard every batch leaf's leading dim over the (strategy) batch axes."""
+    cands = _batch_candidates(mesh, strategy)
+
+    def one(leaf):
+        if not leaf.shape:
+            return NamedSharding(mesh, P())
+        axes = _largest_dividing(mesh, cands, leaf.shape[0])
+        if axes is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(axes, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    return tuple(names)
+
+
+def _model_spec_for(name: str, top_level: bool, trailing: Tuple[int, ...],
+                    cfg) -> Tuple[Optional[str], ...]:
+    """'model'-axis placement for the trailing (un-stacked) dims."""
+    nd = len(trailing)
+    spec = [None] * nd
+    if nd < 2:
+        return tuple(spec)
+    if nd >= 3 and cfg.num_experts > 0 and trailing[0] == cfg.num_experts:
+        spec[0] = "model"                       # expert parallelism
+        return tuple(spec)
+    if name == "embed":
+        spec[0] = "model"                       # vocab-parallel embedding
+        return tuple(spec)
+    if name == "w_out" and top_level:
+        spec[-1] = "model"                      # LM head: vocab dim
+        return tuple(spec)
+    if name == "w_router":
+        return tuple(spec)                      # router stays replicated
+    if name in _COL:
+        spec[-1] = "model"
+        return tuple(spec)
+    if name in _ROW:
+        spec[-2] = "model"
+        return tuple(spec)
+    # fallback: shard the largest trailing dim
+    spec[int(max(range(nd), key=lambda i: trailing[i]))] = "model"
+    return tuple(spec)
+
+
+def param_shardings(params: Any, cfg, mesh) -> Any:
+    """NamedSharding tree for a parameter (ShapeDtypeStruct) tree.
+
+    Handles both the per-layer leaves and the vmap-stacked ``groups``
+    leaves (their extra leading group dim is never sharded).
+    """
+    fsdp = (getattr(cfg, "sharding_strategy", "tp") == "fsdp"
+            or getattr(cfg, "fsdp", False))
+    daxes = batch_axes(mesh)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        stacked = bool(names) and names[0] == "groups"
+        shape = tuple(leaf.shape)
+        trailing = shape[1:] if stacked and len(shape) > 1 else shape
+        lead = (None,) if stacked and len(shape) > 1 else ()
+
+        spec = list(_model_spec_for(name, len(names) == 1, trailing, cfg))
+        # divisibility guard on the model axis
+        for i, s in enumerate(spec):
+            if s == "model" and trailing[i] % mesh.shape["model"] != 0:
+                spec[i] = None
+        if fsdp and len(trailing) >= 2:
+            # fully-shard: put the data axes on the largest still-free dim
+            free = [i for i in range(len(trailing)) if spec[i] is None]
+            free.sort(key=lambda i: -trailing[i])
+            for i in free:
+                axes = _largest_dividing(
+                    mesh, [daxes] + [(a,) for a in daxes], trailing[i])
+                if axes is not None:
+                    spec[i] = axes if len(axes) > 1 else axes[0]
+                    break
+        return NamedSharding(mesh, P(*lead, *spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# Decode / prefill caches
+# --------------------------------------------------------------------------
+
+def _cache_leaf(leaf, mesh, stacked: bool) -> NamedSharding:
+    shape = tuple(leaf.shape)
+    trailing = shape[1:] if stacked and len(shape) > 1 else shape
+    lead = (None,) if stacked and len(shape) > 1 else ()
+    if len(trailing) < 2:                       # pos / next_pos bookkeeping
+        return NamedSharding(mesh, P())
+    spec = [None] * len(trailing)
+    daxes = _largest_dividing(
+        mesh, [batch_axes(mesh)] + [(a,) for a in batch_axes(mesh)],
+        trailing[0])
+    if daxes is not None:
+        spec[0] = daxes if len(daxes) > 1 else daxes[0]
+    # (B, S, Hkv, Dh) kv caches / (B, H, Dh, Dh) wkv states: heads on model
+    if len(trailing) == 4 and trailing[2] % mesh.shape["model"] == 0:
+        spec[2] = "model"
+    elif len(trailing) == 4 and trailing[1] % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    return NamedSharding(mesh, P(*lead, *spec))
+
+
+def cache_shardings(caches: Any, cfg, mesh) -> Any:
+    """Shardings for the (stacked group caches, tail cache list) pair."""
+    gcaches, tcaches = caches
+    g_sh = (None if gcaches is None else
+            jax.tree.map(lambda l: _cache_leaf(l, mesh, stacked=True),
+                         gcaches))
+    t_sh = jax.tree.map(lambda l: _cache_leaf(l, mesh, stacked=False),
+                        tcaches)
+    return (g_sh, t_sh)

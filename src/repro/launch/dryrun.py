@@ -42,6 +42,15 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize compiled.cost_analysis() across JAX versions (older
+    releases return a one-element list of dicts, newer a flat dict)."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return {k: float(v) for k, v in (cost or {}).items()
+            if isinstance(v, (int, float))}
+
+
 def input_specs(cfg, shape_name: str):
     """ShapeDtypeStruct stand-ins for every model input of this cell."""
     sc = SHAPES[shape_name]
@@ -161,8 +170,7 @@ def _cost_record(cfg, shape_name, mesh):
     for g in (1, 2):
         lowered = _lower_cell(_costing_cfg(cfg, g), shape_name, mesh)
         compiled = lowered.compile()
-        cost = {k: float(v) for k, v in (compiled.cost_analysis() or {}).items()
-                if isinstance(v, (int, float))}
+        cost = _cost_dict(compiled.cost_analysis())
         coll = collective_bytes_from_text(compiled.as_text())
         recs.append((cost, coll))
     (c1, k1), (c2, k2) = recs
@@ -217,8 +225,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, mesh=None,
         "lower_s": round(t_lower - t_start, 2),
         "compile_s": round(t_compile - t_lower, 2),
         "memory": _mem_dict(mem),
-        "cost": {k: float(v) for k, v in (cost or {}).items()
-                 if isinstance(v, (int, float))},
+        "cost": _cost_dict(cost),
         "collectives": coll,
         "costing": costing_rec,
         "hlo_bytes": len(hlo),

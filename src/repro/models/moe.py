@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.compat import shard_map
 from repro.models.common import dense, ninit, shard
 
 
@@ -143,7 +144,7 @@ def apply_moe_shard_map(params, x, cfg):
             aux = jax.lax.pmean(aux, baxes)
         return y.reshape(bl, sl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         body,
         mesh=mesh,
         in_specs=(bspec, P(), P("model", None, None),

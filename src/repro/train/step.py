@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.collectives import compressed_psum_tree
+from repro.dist.compat import HAS_PARTIAL_AUTO, shard_map
 from repro.dist.sharding import batch_axes
 from repro.models import lm
 from repro.train.state import TrainState
@@ -43,25 +44,36 @@ def make_train_step(cfg, optimizer, mesh=None, grad_compress: bool = False,
 
     assert mesh is not None, "compressed-DP mode needs the mesh"
     dp_axes = batch_axes(mesh)
+    # Partial-auto ('model' stays GSPMD-parallel) needs the modern
+    # jax.shard_map; legacy XLA fatally asserts on it for real model
+    # graphs, so there the whole step runs manual and the model-axis
+    # replicas redundantly compute their DP shard (correct, DP-only).
+    manual_axes = set(dp_axes) if HAS_PARTIAL_AUTO else None
 
     def per_shard(params, err, batch):
         # local-shard loss/grads; 'model' axis stays auto-parallel
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         grads, err = compressed_psum_tree(grads, dp_axes, rel_eb, err)
         loss = jax.lax.pmean(loss, dp_axes)
+        # NOTE: err is genuinely per-DP-member but leaves through
+        # out_specs=P() (check_vma=False).  On-device across steps each
+        # member keeps consuming its own residual shard, so EF-SGD is
+        # exact in the steady loop; a host transfer (checkpoint) collapses
+        # the tree to member 0's residual, which forfeits at most one
+        # step's eb-scale compensation on restore.  The alternative — a
+        # replicated pmean'd residual — would double the collective
+        # volume and defeat the wire win.
         return loss, grads, err
-
-    bspec = P(dp_axes)
 
     def step(state: TrainState, batch):
         batch_specs = jax.tree.map(
             lambda x: P(dp_axes, *([None] * (x.ndim - 1))), batch)
-        sharded = jax.shard_map(
+        sharded = shard_map(
             per_shard,
             mesh=mesh,
             in_specs=(P(), P(), batch_specs),
             out_specs=(P(), P(), P()),
-            axis_names=set(dp_axes),
+            axis_names=manual_axes,
             check_vma=False,
         )
         loss, grads, err = sharded(state.params, state.err, batch)

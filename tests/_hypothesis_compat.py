@@ -1,0 +1,142 @@
+"""Minimal deterministic fallback for the ``hypothesis`` library.
+
+CI has no network access, so ``hypothesis`` may be missing.  Test modules
+import it as
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+When the real library is present it is used unchanged.  This shim keeps
+the property-test *shape* but expands each strategy into a small fixed
+example set: ``@given(s1, s2, ...)`` turns the test into a loop over
+``min(max_examples, 10)`` deterministic draws (each strategy draws from a
+seeded-per-index RNG), so the tests still sweep a spread of inputs and
+failures reproduce exactly.  Only the strategy surface this repo uses is
+implemented: integers / floats / sampled_from / lists.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, List
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10   # cap: deterministic shim trades volume for speed
+
+
+class _Strategy:
+    """A deterministic example generator: draw(i) -> i-th example."""
+
+    def draw(self, i: int, rng: np.random.Generator) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def draw(self, i, rng):
+        edges = [self.lo, self.hi, (self.lo + self.hi) // 2]
+        if i < len(edges):
+            return edges[i]
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float, **_kw):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def draw(self, i, rng):
+        edges = [self.lo, self.hi, 0.0 if self.lo <= 0.0 <= self.hi
+                 else 0.5 * (self.lo + self.hi)]
+        if i < len(edges):
+            return np.float32(edges[i]).item()
+        u = rng.random()
+        return np.float32(self.lo + u * (self.hi - self.lo)).item()
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def draw(self, i, rng):
+        if i < len(self.options):
+            return self.options[i]
+        return self.options[int(rng.integers(len(self.options)))]
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int = 0,
+                 max_size: int = 10):
+        self.elem = elem
+        self.min_size, self.max_size = int(min_size), int(max_size)
+
+    def draw(self, i, rng):
+        sizes = [self.min_size, self.max_size,
+                 (self.min_size + self.max_size) // 2]
+        n = (sizes[i] if i < len(sizes)
+             else int(rng.integers(self.min_size, self.max_size + 1)))
+        return [self.elem.draw(int(rng.integers(1000)), rng)
+                for _ in range(max(n, self.min_size))]
+
+
+class _StrategiesModule:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **kw) -> _Strategy:
+        return _Floats(min_value, max_value, **kw)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        return _SampledFrom(options)
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Lists(elem, min_size=min_size, max_size=max_size)
+
+
+strategies = _StrategiesModule()
+st = strategies
+
+
+def given(*strats: _Strategy):
+    """Expand the strategies into a deterministic example loop."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                    _DEFAULT_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng([i, len(strats), 0xC0FFEE])
+                drawn = [s.draw(i, rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kw)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}") from e
+            return None
+        wrapper._hypothesis_shim = True
+        # hide the strategy parameters from pytest's fixture resolution
+        # (inspect.signature would otherwise follow __wrapped__)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Record max_examples on the (already-)wrapped test; ignore the rest
+    (deadline etc. have no meaning for the deterministic shim)."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # no network in CI: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bitpack
 

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # no network in CI: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import io as cio
 from repro.core.szp import (compress_codes, decompress_codes, szp_compress,
@@ -46,6 +49,25 @@ def test_serialize_roundtrip(smooth_field):
     assert bool(jnp.all(rec1 == rec2))
     # true on-disk size within a header of the jit-side accounting
     assert abs(len(blob) - int(parts.nbytes)) <= 64
+
+
+def test_rank_stream_bytes_matches_serialized(smooth_field):
+    """The jit-side sparse-rank accounting equals the real byte size of the
+    trimmed rank stream (serialize-time `_trim_rank_parts` slicing)."""
+    from repro.core.io import _trim_rank_parts
+    from repro.core.szp import DEFAULT_BLOCK
+    from repro.core.toposzp import rank_stream_bytes, toposzp_compress
+
+    f = jnp.asarray(smooth_field)
+    eb = 1e-3
+    comp = toposzp_compress(f, eb)
+    n_cp = int(comp.n_cp)
+    assert n_cp > 0, "fixture must contain critical points"
+    trimmed = _trim_rank_parts(comp.ranks, n_cp, DEFAULT_BLOCK)
+    blob = cio.serialize_szp(trimmed, f.shape, eb, DEFAULT_BLOCK)
+    accounted = int(rank_stream_bytes(comp.n_cp, comp.ranks.payload_nbytes,
+                                      DEFAULT_BLOCK))
+    assert len(blob) == accounted, (len(blob), accounted)
 
 
 @settings(max_examples=25, deadline=None)
