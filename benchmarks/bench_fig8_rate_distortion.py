@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from benchmarks.common import bench_grid, emit, timeit
+from benchmarks.common import bench_grid, emit
 from repro.core import false_cases_host, szp_compress, szp_decompress
 from repro.core.baselines import (sz_lorenzo2d_compress,
                                   sz_lorenzo2d_decompress, zfp_like_compress,

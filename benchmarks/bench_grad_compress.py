@@ -3,49 +3,95 @@
 Measures (a) the bits/value the quantized gradient codes need at several
 relative error bounds (the DP all-reduce byte reduction vs bf16/f32 wire),
 (b) the homomorphic-sum error across simulated DP members — the
-collective-term reduction claimed in EXPERIMENTS.md §Perf — and (c) the
-end-to-end train-step time of the compressed-psum shard_map path vs the
-baseline (uncompressed bf16 all-reduce inserted by GSPMD).
+collective-term reduction claimed in EXPERIMENTS.md §Perf — (c) the
+topology-aware collective: protected-tail size, sidecar wire overhead and
+top-k rank-preservation rate vs the plain compressed psum, and (d) the
+end-to-end train-step time of the compressed / topo-compressed shard_map
+paths vs the baseline (uncompressed bf16 all-reduce inserted by GSPMD).
 
 Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise a
 real multi-member data-parallel reduction; on a single device the psum is
 a 1-member identity but the full compression path still runs.
+
+``--json PATH`` writes the machine-readable results file the CI
+regression gate (benchmarks/check_regression.py) consumes; ``--smoke``
+shrinks the arrays for CI wall-clock.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
-from repro.dist.collectives import code_bits, quantize_dequantize_sum
+from benchmarks.common import emit, reset_records, timeit, write_json
+from repro.dist.collectives import (code_bits, protect_k,
+                                    quantize_dequantize_sum, sidecar_bits,
+                                    topk_rank_preservation,
+                                    topo_quantize_dequantize_sum,
+                                    topo_wire_bits)
+
+TOPO_FRAC = 1e-3          # protected-tail knob exercised by the benchmark
+RANK_TOP_K = 64           # tail size the rank-preservation rate reports
 
 
-def run():
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
     # gradient-shaped data: heavy-tailed, small magnitude
-    g = (rng.standard_normal((16, 1 << 20)) * 1e-3).astype(np.float32)
+    n_members, size = (8, 1 << 17) if smoke else (16, 1 << 20)
+    g = (rng.standard_normal((n_members, size)) * 1e-3).astype(np.float32)
     g[:, :100] *= 100.0                       # outliers like real grads
     gj = jnp.asarray(g)
+    rel_ebs = (1e-2, 1e-3) if smoke else (1e-2, 1e-3, 1e-4)
 
-    for rel_eb in (1e-2, 1e-3, 1e-4):
+    for rel_eb in rel_ebs:
         bits = int(code_bits(gj[0], rel_eb))
         homo, direct = quantize_dequantize_sum(gj, rel_eb=rel_eb)
         err = float(jnp.abs(homo - direct).max())
         scale = float(jnp.abs(gj).max())
         t = timeit(lambda: quantize_dequantize_sum(gj, rel_eb=rel_eb))
-        emit(f"gradcomp/rel_eb{rel_eb:.0e}", t * 1e6,
-             f"bits_per_val={bits};wire_reduction_vs_bf16={16 / bits:.1f}x;"
-             f"homo_err={err:.3e};rel={err / scale:.2e}")
+        emit(f"gradcomp/rel_eb{rel_eb:.0e}", t * 1e6, {
+            "bits_per_val": bits,
+            "wire_reduction_vs_bf16": 16 / bits,
+            "homo_err": err,
+            "rel": err / scale,
+        })
+        _bench_topo(gj, rel_eb, homo, direct)
 
-    _bench_train_step(rel_eb=1e-3)
+    _bench_train_step(rel_eb=1e-3, smoke=smoke)
 
 
-def _bench_train_step(rel_eb: float):
-    """Compressed-psum train step vs the uncompressed-psum baseline."""
+def _bench_topo(gj: jnp.ndarray, rel_eb: float, plain_homo: jnp.ndarray,
+                direct: jnp.ndarray):
+    """Topo-aware homomorphic sum: tail size, wire overhead, rank rate."""
+    n_members, size = gj.shape
+    k = protect_k(size, TOPO_FRAC)
+    topo, _, protected = topo_quantize_dequantize_sum(gj, rel_eb, TOPO_FRAC)
+    exact = float(jnp.max(jnp.abs(topo[protected] - direct[protected])))
+    body_bits = int(code_bits(gj[0], rel_eb)) * size
+    side_bits = sidecar_bits(size, TOPO_FRAC, n_members)
+    overhead = side_bits / (body_bits + side_bits)
+    t = timeit(lambda: topo_quantize_dequantize_sum(gj, rel_eb, TOPO_FRAC))
+    emit(f"gradcomp/topo_rel_eb{rel_eb:.0e}", t * 1e6, {
+        "topo_frac": TOPO_FRAC,
+        "protected_per_member": k,
+        "protected_union": int(np.unique(np.asarray(protected)).size),
+        "protected_max_err": exact,
+        "sidecar_bits_per_val": side_bits / size,
+        "sidecar_overhead_frac": overhead,
+        f"rank_preservation_top{RANK_TOP_K}":
+            topk_rank_preservation(direct, topo, RANK_TOP_K),
+        f"rank_preservation_top{RANK_TOP_K}_plain":
+            topk_rank_preservation(direct, plain_homo, RANK_TOP_K),
+    })
+
+
+def _bench_train_step(rel_eb: float, smoke: bool = False):
+    """Compressed / topo-compressed train step vs the uncompressed psum."""
+    from repro.data import token_batches
     from repro.dist import sharding as shd
     from repro.dist.elastic import rebuild_mesh
-    from repro.data import token_batches
     from repro.models import lm, registry
     from repro.optim import adamw, constant
     from repro.train import init_state, make_train_step
@@ -54,7 +100,9 @@ def _bench_train_step(rel_eb: float):
     mesh = rebuild_mesh(jax.devices(), model_parallel=1)
     n_dp = mesh.shape["data"]
     b = n_dp * max(1, 8 // n_dp)
-    batch = jax.tree.map(jnp.asarray, next(token_batches(cfg, b, 32, seed=0)))
+    seq = 16 if smoke else 32
+    batch = jax.tree.map(jnp.asarray,
+                         next(token_batches(cfg, b, seq, seed=0)))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     opt = adamw(constant(1e-3))
 
@@ -72,18 +120,60 @@ def _bench_train_step(rel_eb: float):
     assert np.isfinite(loss_c), "compressed step produced non-finite loss"
     t_c = timeit(lambda: step_c(state_c, batch)[1]["loss"])
 
+    # topo-compressed: exact top-|g| sidecar riding the quantized stream
+    state_t = init_state(params, opt, grad_compress=True)
+    step_t = jax.jit(make_train_step(cfg, opt, mesh=mesh, grad_compress=True,
+                                     rel_eb=rel_eb, topo_frac=TOPO_FRAC))
+    loss_t = float(step_t(state_t, batch)[1]["loss"])
+    assert np.isfinite(loss_t), "topo step produced non-finite loss"
+    t_t = timeit(lambda: step_t(state_t, batch)[1]["loss"])
+
     # wire width of the REAL step gradients (size-weighted mean bits/value)
     grads = jax.jit(jax.grad(lambda p: lm.loss_fn(p, cfg, batch)))(params)
     leaves = [g.astype(jnp.float32) for g in jax.tree.leaves(grads)]
     total = sum(g.size for g in leaves)
-    bits = sum(g.size * int(code_bits(g, rel_eb)) for g in leaves) / total
+    body = sum(g.size * int(code_bits(g, rel_eb)) for g in leaves)
+    topo_total = sum(topo_wire_bits(g, rel_eb, TOPO_FRAC, n_dp)
+                     for g in leaves)
+    side = topo_total - body
+    protected = sum(protect_k(g.size, TOPO_FRAC) for g in leaves)
+
     emit("gradcomp/step_uncompressed_psum", t_b * 1e6,
-         f"dp_members={n_dp};loss_finite=1")
-    emit("gradcomp/step_compressed_psum", t_c * 1e6,
-         f"dp_members={n_dp};time_vs_uncompressed={t_c / t_b:.2f}x;"
-         f"wire_bits_per_val={bits:.1f};"
-         f"wire_reduction_vs_bf16={16 / bits:.1f}x;loss={loss_c:.4f}")
+         {"dp_members": n_dp, "loss_finite": 1})
+    emit("gradcomp/step_compressed_psum", t_c * 1e6, {
+        "dp_members": n_dp,
+        "time_vs_uncompressed": t_c / t_b,
+        "wire_bits_per_val": body / total,
+        "wire_reduction_vs_bf16": 16 * total / body,
+        "loss": loss_c,
+    })
+    emit("gradcomp/step_topo_compressed_psum", t_t * 1e6, {
+        "dp_members": n_dp,
+        "topo_frac": TOPO_FRAC,
+        "time_vs_uncompressed": t_t / t_b,
+        "time_vs_compressed": t_t / t_c,
+        "protected_per_member": protected,
+        "wire_bits_per_val": (body + side) / total,
+        "sidecar_bits_per_val": side / total,
+        "sidecar_overhead_frac": side / (body + side),
+        "wire_reduction_vs_bf16": 16 * total / (body + side),
+        "loss": loss_t,
+    })
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI wall-clock")
+    args = ap.parse_args()
+    reset_records()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+    if args.json:
+        write_json(args.json, bench="bench_grad_compress", smoke=args.smoke)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -8,7 +8,6 @@ eps_topo=..".
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import bench_grid, emit, timeit

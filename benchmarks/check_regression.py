@@ -1,0 +1,111 @@
+"""CI bench-regression gate for the grad-compression benchmark.
+
+Compares a machine-readable results file (written by
+``python -m benchmarks.bench_grad_compress --json ...``) against the
+checked-in baseline and fails when a gated metric regresses beyond its
+tolerance.  Gates live in the baseline file so the thresholds are
+reviewed like code:
+
+    {"schema_version": 1,
+     "gates": [{"record": "gradcomp/step_compressed_psum",
+                "metric": "wire_bits_per_val",
+                "baseline": 9.0,
+                "max_regression": 0.2,        # fail above 9.0 * 1.2
+                "direction": "lower_is_better"}]}
+
+``direction`` is ``lower_is_better`` (default; fails when current >
+baseline * (1 + max_regression)) or ``higher_is_better`` (fails when
+current < baseline * (1 - max_regression)).  Wall-clock gates use
+machine-independent ratios (``time_vs_uncompressed``) rather than
+absolute microseconds so laptop and CI runners share one baseline.
+
+Usage:
+    python benchmarks/check_regression.py results/bench_grad_compress.json \
+        [--baseline benchmarks/baseline_grad_compress.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baseline_grad_compress.json"
+SCHEMA_VERSION = 1
+
+
+def load_metrics(results_path: str) -> dict:
+    """Flatten a results file into {record_name: {metric: value}}."""
+    with open(results_path) as f:
+        doc = json.load(f)
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise SystemExit(f"unsupported results schema_version "
+                         f"{doc.get('schema_version')!r} in {results_path}")
+    out = {}
+    for rec in doc.get("records", []):
+        metrics = dict(rec.get("metrics", {}))
+        metrics["us_per_call"] = rec.get("us_per_call")
+        out[rec["name"]] = metrics
+    return out
+
+
+def check_gate(gate: dict, current: dict) -> str | None:
+    """Return a failure message for one gate, or None when it passes."""
+    record, metric = gate["record"], gate["metric"]
+    base = float(gate["baseline"])
+    tol = float(gate.get("max_regression", 0.2))
+    direction = gate.get("direction", "lower_is_better")
+    rec = current.get(record)
+    if rec is None:
+        return f"{record}: record missing from results"
+    if metric not in rec:
+        return f"{record}.{metric}: metric missing from results"
+    value = float(rec[metric])
+    if direction == "higher_is_better":
+        limit = base * (1 - tol)
+        if value < limit:
+            return (f"{record}.{metric}: {value:.4g} < {limit:.4g} "
+                    f"(baseline {base:.4g}, -{tol:.0%} tolerance)")
+    else:
+        limit = base * (1 + tol)
+        if value > limit:
+            return (f"{record}.{metric}: {value:.4g} > {limit:.4g} "
+                    f"(baseline {base:.4g}, +{tol:.0%} tolerance)")
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("results", help="results JSON written by the benchmark")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if baseline.get("schema_version") != SCHEMA_VERSION:
+        raise SystemExit(f"unsupported baseline schema_version "
+                         f"{baseline.get('schema_version')!r}")
+    gates = baseline.get("gates", [])
+    if not gates:
+        raise SystemExit(f"no gates defined in {args.baseline}")
+
+    current = load_metrics(args.results)
+    failures = []
+    for gate in gates:
+        msg = check_gate(gate, current)
+        tag = "FAIL" if msg else "ok  "
+        shown = msg or (f"{gate['record']}.{gate['metric']} = "
+                        f"{current[gate['record']][gate['metric']]:.4g} "
+                        f"(baseline {float(gate['baseline']):.4g})")
+        print(f"[gate] {tag} {shown}")
+        if msg:
+            failures.append(msg)
+
+    if failures:
+        print(f"[gate] {len(failures)}/{len(gates)} gates regressed")
+        return 1
+    print(f"[gate] all {len(gates)} gates green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

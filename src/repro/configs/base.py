@@ -64,6 +64,8 @@ class ArchConfig:
                                       #   fully sharded params/optimizer)
     rwkv_impl: str = "scan"           # scan | chunked (matmul-form WKV)
     grad_compress: bool = False       # hZCCL-style quantized DP all-reduce
+    grad_topo_frac: float = 0.0       # TopoSZp protected top-|g| tail frac
+                                      #   (0 = plain compressed psum)
     # costing mode (roofline): scans counted once by XLA cost analysis, so
     # the dry-run lowers small-depth UNROLLED variants and extrapolates.
     unroll_groups: bool = False

@@ -1,13 +1,18 @@
 """Distributed layer: sharding rules, compressed collectives, elasticity.
 
 ``dist.sharding``    — NamedSharding rules for params / batches / caches
-``dist.collectives`` — error-bounded compressed gradient psum (+EF)
+``dist.collectives`` — error-bounded compressed gradient psum (+EF),
+                       topo-aware variant with an exact top-|g| sidecar
 ``dist.elastic``     — largest-valid-mesh rebuild after device loss
 ``dist.compat``      — shard_map shim across JAX versions
 """
 from repro.dist import collectives, compat, elastic, sharding
 from repro.dist.collectives import (code_bits, compressed_psum_tree,
-                                    quantize_dequantize_sum)
+                                    protect_k, quantize_dequantize_sum,
+                                    sidecar_bits, topk_rank_preservation,
+                                    topo_compressed_psum_tree,
+                                    topo_quantize_dequantize_sum,
+                                    topo_wire_bits)
 from repro.dist.compat import shard_map
 from repro.dist.elastic import largest_mesh_shape, rebuild_mesh
 from repro.dist.sharding import (batch_axes, cache_shardings, data_sharding,
@@ -16,6 +21,9 @@ from repro.dist.sharding import (batch_axes, cache_shardings, data_sharding,
 __all__ = [
     "collectives", "compat", "elastic", "sharding",
     "code_bits", "compressed_psum_tree", "quantize_dequantize_sum",
+    "protect_k", "sidecar_bits", "topk_rank_preservation",
+    "topo_compressed_psum_tree", "topo_quantize_dequantize_sum",
+    "topo_wire_bits",
     "shard_map", "largest_mesh_shape", "rebuild_mesh",
     "batch_axes", "cache_shardings", "data_sharding", "param_shardings",
     "replicated",

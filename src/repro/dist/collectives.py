@@ -16,13 +16,29 @@ compressed collectives:
     ``(g + err) - dequant(q)`` into the next step, so the compression
     error does not accumulate over training (EF-SGD).
 
+Topology-aware variant (``topo_compressed_psum_tree``): the paper keeps
+field extrema exact because flattening them destroys the topology users
+analyze; the gradient analogue is the top-|g| tail that drives optimizer
+updates.  Each member detects its local protected tail (top-k by
+|g + err|, k from ``topo_frac`` — the strict-comparison selection idiom
+of core/critical_points.py applied along the magnitude axis), the union
+of protected indices is all-gathered, every member's EXACT fp32 value at
+every union index is psum'd as a sparse (index, value) sidecar, and a
+post-sum restore pass pins the summed gradient to those exact sums —
+mirroring kernels/extrema_restore.py pinning field extrema.  Protected
+entries are therefore bit-exact (their relative rank order — the
+core/relative_order.py invariant — is preserved for free) while the
+quantized body keeps the ``n_members * eb`` homomorphic bound.
+
 The wire width of the codes (vs 16-bit bf16 values) is what
-``code_bits`` accounts; benchmarks/bench_grad_compress.py reports the
+``code_bits`` accounts; ``sidecar_bits``/``topo_wire_bits`` add the
+sparse sidecar cost and benchmarks/bench_grad_compress.py reports the
 resulting byte reduction.  core/bitpack packs the codes for the on-disk
 format; on the wire the dry-run costs them at ``code_bits`` per value.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
@@ -36,6 +52,10 @@ AxisNames = Union[str, Sequence[str]]
 # eb floor: keeps all-zero leaves (fresh error feedback, frozen params)
 # from dividing by zero; anything at this scale quantizes to code 0.
 _EB_TINY = 1e-30
+
+# Sidecar wire widths: int32 flat indices, fp32 exact values.
+SIDECAR_INDEX_BITS = 32
+SIDECAR_VALUE_BITS = 32
 
 
 def _leaf_eb(x: jnp.ndarray, rel_eb: float,
@@ -55,6 +75,62 @@ def code_bits(g: jnp.ndarray, rel_eb: float) -> jnp.ndarray:
     return bitwidth(jnp.max(jnp.abs(q)).astype(jnp.uint32)) + 1
 
 
+# --------------------------------------------------------------------------
+# Topology-aware protection: static sizing + wire accounting
+# --------------------------------------------------------------------------
+
+def protect_k(size: int, topo_frac: float) -> int:
+    """Protected-tail length for a leaf of ``size`` elements (static).
+
+    ``topo_frac <= 0`` disables protection; otherwise at least one entry
+    per (non-empty) leaf is protected — every leaf has a largest
+    component, the way every field has at least one extremum.
+    """
+    if topo_frac <= 0.0:
+        return 0
+    return min(size, max(1, int(math.ceil(topo_frac * size))))
+
+
+def sidecar_bits(size: int, topo_frac: float, n_members: int) -> int:
+    """Per-member wire bits of the exact sidecar for one leaf.
+
+    One all-gather of the k local protected indices (k * 32 bits sent per
+    member) plus one fp32 psum over the gathered union of n*k candidate
+    entries (n * k * 32 bits moved per member).
+    """
+    k = protect_k(size, topo_frac)
+    return k * SIDECAR_INDEX_BITS + n_members * k * SIDECAR_VALUE_BITS
+
+
+def topo_wire_bits(g: jnp.ndarray, rel_eb: float, topo_frac: float,
+                   n_members: int) -> float:
+    """Total per-member wire bits for one leaf: quantized body + sidecar."""
+    body = int(code_bits(g, rel_eb)) * g.size
+    return body + sidecar_bits(g.size, topo_frac, n_members)
+
+
+def topk_rank_preservation(direct: jnp.ndarray, approx: jnp.ndarray,
+                           k: int) -> float:
+    """Fraction of the top-k |direct| entries whose value rank survives.
+
+    Ranks come from a double argsort over the selected entries (the dense
+    ranking idiom of core/relative_order.py); an entry counts as preserved
+    when its descending-value rank in ``approx`` equals its rank in
+    ``direct``.
+    """
+    d = direct.reshape(-1).astype(jnp.float32)
+    a = approx.reshape(-1).astype(jnp.float32)
+    idx = jax.lax.top_k(jnp.abs(d), k)[1]
+    dvals, avals = d[idx], a[idx]
+    drank = jnp.argsort(jnp.argsort(-dvals))
+    arank = jnp.argsort(jnp.argsort(-avals))
+    return float(jnp.mean((drank == arank).astype(jnp.float32)))
+
+
+# --------------------------------------------------------------------------
+# Homomorphic sums (stacked-member form, used by tests/benchmarks)
+# --------------------------------------------------------------------------
+
 def quantize_dequantize_sum(xs: jnp.ndarray, rel_eb: float
                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Homomorphic sum of ``xs[i]`` through the quantizer vs the direct sum.
@@ -70,6 +146,95 @@ def quantize_dequantize_sum(xs: jnp.ndarray, rel_eb: float
     return homo, xs.sum(axis=0)
 
 
+def topo_quantize_dequantize_sum(
+        xs: jnp.ndarray, rel_eb: float, topo_frac: float
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Topology-aware homomorphic sum over stacked members.
+
+    Single-process simulation of ``topo_compressed_psum_tree`` semantics:
+    quantized body summed through the codes, protected union restored to
+    the exact fp32 member sum.  Returns ``(topo_homo, direct, protected)``
+    where ``protected`` is the (n_members * k,) union of per-member top-k
+    flat indices (with duplicates).  ``topo_homo[protected]`` equals
+    ``direct[protected]`` bit-exactly; everywhere else the
+    ``n_members * eb`` body bound holds.
+    """
+    xs = xs.astype(jnp.float32)
+    n = xs.shape[0]
+    flat = xs.reshape(n, -1)
+    size = flat.shape[1]
+    k = protect_k(size, topo_frac)
+    eb = _leaf_eb(xs, rel_eb)
+    q = quantize(flat, eb)
+    body = dequantize(q.sum(axis=0), eb)
+    direct = flat.sum(axis=0)
+    if k == 0:
+        protected = jnp.zeros((0,), jnp.int32)
+        return body.reshape(xs.shape[1:]), direct.reshape(xs.shape[1:]), \
+            protected
+    idx = jax.lax.top_k(jnp.abs(flat), k)[1]          # (n, k) local tails
+    protected = idx.reshape(-1)                       # gathered union
+    exact = flat[:, protected].sum(axis=0)            # fp32 sidecar psum
+    topo = body.at[protected].set(exact)
+    return topo.reshape(xs.shape[1:]), direct.reshape(xs.shape[1:]), protected
+
+
+# --------------------------------------------------------------------------
+# In-mesh collectives (shard_map manual-axes context)
+# --------------------------------------------------------------------------
+
+def _psum_leaf(g: jnp.ndarray, e: Optional[jnp.ndarray],
+               axes: Tuple[str, ...], n: jnp.ndarray, rel_eb: float,
+               topo_frac: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One leaf of the (optionally topo-protected) compressed mean-psum."""
+    if g.size == 0:        # degenerate leaf: nothing on the wire
+        return g, jnp.zeros(g.shape, jnp.float32)
+    g32 = g.astype(jnp.float32)
+    ge = g32 if e is None else g32 + e.astype(jnp.float32)
+    eb = _leaf_eb(ge, rel_eb, axes)
+    flat = ge.reshape(-1)
+    q = quantize(flat, eb)
+    deq = dequantize(q, eb)
+    gsum = dequantize(jax.lax.psum(q, axes), eb)
+    new_e = flat - deq
+    k = protect_k(flat.shape[0], topo_frac)
+    if k > 0:
+        # CD stage on the gradient: each member's local protected tail.
+        idx = jax.lax.top_k(jnp.abs(flat), k)[1]
+        # Union of tails (identical on every member), then the exact fp32
+        # sidecar: every member contributes its own value at EVERY union
+        # index, so the psum'd entry is the true sum — not just the sum of
+        # the members that happened to protect it.
+        union = jax.lax.all_gather(idx, axes, tiled=True)
+        exact = jax.lax.psum(flat[union], axes)
+        # RP^-style restore: pin protected entries to their exact sums
+        # (duplicate union indices carry identical values, so the scatter
+        # is order-independent).
+        gsum = gsum.at[union].set(exact)
+        # Exact transmission leaves no local residual at protected entries.
+        new_e = new_e.at[union].set(0.0)
+    gbar = (gsum / n).reshape(g.shape)
+    return gbar.astype(g.dtype), new_e.reshape(g.shape)
+
+
+def _psum_tree(grads: Any, axes: AxisNames, rel_eb: float,
+               err: Optional[Any], topo_frac: float) -> Tuple[Any, Any]:
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = ([None] * len(leaves_g) if err is None
+                else jax.tree.leaves(err))
+    pairs = [_psum_leaf(g, e, axes, n, rel_eb, topo_frac)
+             for g, e in zip(leaves_g, leaves_e)]
+    new_g = treedef.unflatten([p[0] for p in pairs])
+    if err is None:
+        new_e = treedef.unflatten([p[1] for p in pairs])
+    else:
+        new_e = treedef.unflatten([p[1].astype(e.dtype)
+                                   for p, e in zip(pairs, leaves_e)])
+    return new_g, new_e
+
+
 def compressed_psum_tree(grads: Any, axes: AxisNames, rel_eb: float = 1e-3,
                          err: Optional[Any] = None) -> Tuple[Any, Any]:
     """Error-bounded compressed psum over a gradient pytree.
@@ -79,27 +244,27 @@ def compressed_psum_tree(grads: Any, axes: AxisNames, rel_eb: float = 1e-3,
     mean differs from the direct ``pmean`` by at most ``rel_eb *
     pmax|g + err|`` per leaf element (n_members * eb summed, / n_members).
     """
-    axes = (axes,) if isinstance(axes, str) else tuple(axes)
-    n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
+    return _psum_tree(grads, axes, rel_eb, err, topo_frac=0.0)
 
-    def one(g: jnp.ndarray, e: Optional[jnp.ndarray]):
-        g32 = g.astype(jnp.float32)
-        ge = g32 if e is None else g32 + e.astype(jnp.float32)
-        eb = _leaf_eb(ge, rel_eb, axes)
-        q = quantize(ge, eb)
-        deq = dequantize(q, eb)
-        gbar = dequantize(jax.lax.psum(q, axes), eb) / n
-        new_e = ge - deq
-        return gbar.astype(g.dtype), new_e
 
-    leaves_g, treedef = jax.tree.flatten(grads)
-    leaves_e = ([None] * len(leaves_g) if err is None
-                else jax.tree.leaves(err))
-    pairs = [one(g, e) for g, e in zip(leaves_g, leaves_e)]
-    new_g = treedef.unflatten([p[0] for p in pairs])
-    if err is None:
-        new_e = treedef.unflatten([p[1] for p in pairs])
-    else:
-        new_e = treedef.unflatten([p[1].astype(e.dtype)
-                                   for p, e in zip(pairs, leaves_e)])
-    return new_g, new_e
+def topo_compressed_psum_tree(grads: Any, axes: AxisNames,
+                              rel_eb: float = 1e-3, topo_frac: float = 1e-3,
+                              err: Optional[Any] = None) -> Tuple[Any, Any]:
+    """Topology-aware compressed psum: exact top-|g| tail + bounded body.
+
+    Same contract as :func:`compressed_psum_tree` plus, per leaf, the
+    union of per-member top-``protect_k(size, topo_frac)`` entries (by
+    ``|g + err|``) is transmitted exactly in fp32 and restored after the
+    sum.  Guarantees, per leaf:
+
+      (a) body: ``|mean - pmean| <= rel_eb * pmax|g + err|`` elementwise,
+      (b) every protected entry equals the exact fp32 member mean — hence
+          the relative rank order of the protected tail is preserved
+          (modulo the final cast back to the input gradient dtype, which
+          is monotone).
+
+    Wire cost: ``code_bits`` per body value plus ``sidecar_bits(size,
+    topo_frac, n_members)`` per member per leaf (< 5% overhead at
+    ``topo_frac = 1e-3`` for typical 8–12-bit bodies).
+    """
+    return _psum_tree(grads, axes, rel_eb, err, topo_frac=topo_frac)

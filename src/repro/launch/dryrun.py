@@ -124,7 +124,8 @@ def _lower_cell(cfg, shape_name, mesh):
         batch_sh = shd.data_sharding(specs["batch"], mesh,
                                      cfg.sharding_strategy)
         from repro.train.step import make_train_step
-        step = make_train_step(cfg, optimizer, mesh=mesh, grad_compress=gc)
+        step = make_train_step(cfg, optimizer, mesh=mesh, grad_compress=gc,
+                               topo_frac=getattr(cfg, "grad_topo_frac", 0.0))
         jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
                          out_shardings=(state_sh, None),
                          donate_argnums=(0,))

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.data import token_batches
+from repro.dist.compat import HAS_PARTIAL_AUTO
 from repro.launch.mesh import make_test_mesh
 from repro.models import lm, registry, set_active_mesh
 from repro.optim import adamw, wsd
@@ -34,6 +35,10 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--rel-eb", type=float, default=1e-4)
+    ap.add_argument("--topo-frac", type=float, default=None,
+                    help="protected top-|g| tail fraction (TopoSZp-aware "
+                         "collective); 0 forces the plain compressed psum, "
+                         "unset defers to cfg.grad_topo_frac")
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
@@ -44,7 +49,13 @@ def main():
     mesh = None
     if args.data_parallel * args.model_parallel > 1:
         mesh = make_test_mesh(args.data_parallel, args.model_parallel)
-        set_active_mesh(mesh)
+        # Legacy XLA runs the compressed-DP step fully manual (see
+        # dist.compat.HAS_PARTIAL_AUTO); the models' 'model'-axis
+        # sharding constraints are illegal inside that manual context,
+        # so leave the active mesh unset there (model-axis compute is
+        # replicated per DP shard, which is the documented degradation).
+        if not args.grad_compress or HAS_PARTIAL_AUTO:
+            set_active_mesh(mesh)
 
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
     print(f"[train] arch={cfg.name} params={lm.param_count(params):,}")
@@ -53,7 +64,8 @@ def main():
     state = init_state(params, optimizer, args.grad_compress)
     step_fn = make_train_step(cfg, optimizer, mesh=mesh,
                               grad_compress=args.grad_compress,
-                              rel_eb=args.rel_eb)
+                              rel_eb=args.rel_eb,
+                              topo_frac=args.topo_frac)
 
     def batches():
         for b in token_batches(cfg, args.batch, args.seq, seed=args.seed,

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.collectives import compressed_psum_tree
+from repro.dist.collectives import (compressed_psum_tree,
+                                    topo_compressed_psum_tree)
 from repro.dist.compat import HAS_PARTIAL_AUTO, shard_map
 from repro.dist.sharding import batch_axes
 from repro.models import lm
@@ -29,9 +30,26 @@ def make_loss_fn(cfg) -> Callable:
 
 
 def make_train_step(cfg, optimizer, mesh=None, grad_compress: bool = False,
-                    rel_eb: float = 1e-3) -> Callable:
-    """Returns step(state, batch) -> (state', metrics)."""
+                    rel_eb: float = 1e-3,
+                    topo_frac: Optional[float] = None) -> Callable:
+    """Returns step(state, batch) -> (state', metrics).
+
+    ``topo_frac > 0`` upgrades the compressed DP reduction to the
+    topology-aware collective: the per-member top ``topo_frac`` tail of
+    each gradient leaf (by ``|g + err|``) rides an exact fp32 sidecar, so
+    optimizer-driving extrema keep their exact values and rank order
+    while the body stays ``rel_eb``-bounded.  ``None`` (default) defers
+    to ``cfg.grad_topo_frac``; an explicit ``0.0`` forces the plain
+    compressed psum regardless of the config.
+    """
     loss_fn = make_loss_fn(cfg)
+    if topo_frac is None:
+        topo_frac = getattr(cfg, "grad_topo_frac", 0.0)
+    if topo_frac > 0.0 and not grad_compress:
+        raise ValueError(
+            "topo_frac > 0 requires grad_compress=True: the protected "
+            "tail is a sidecar of the compressed collective, not of the "
+            "uncompressed GSPMD all-reduce")
 
     if not grad_compress:
         def step(state: TrainState, batch):
@@ -53,7 +71,11 @@ def make_train_step(cfg, optimizer, mesh=None, grad_compress: bool = False,
     def per_shard(params, err, batch):
         # local-shard loss/grads; 'model' axis stays auto-parallel
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        grads, err = compressed_psum_tree(grads, dp_axes, rel_eb, err)
+        if topo_frac > 0.0:
+            grads, err = topo_compressed_psum_tree(grads, dp_axes, rel_eb,
+                                                   topo_frac, err)
+        else:
+            grads, err = compressed_psum_tree(grads, dp_axes, rel_eb, err)
         loss = jax.lax.pmean(loss, dp_axes)
         # NOTE: err is genuinely per-DP-member but leaves through
         # out_specs=P() (check_vma=False).  On-device across steps each
