@@ -5,9 +5,13 @@ relative error bounds (the DP all-reduce byte reduction vs bf16/f32 wire),
 (b) the homomorphic-sum error across simulated DP members — the
 collective-term reduction claimed in EXPERIMENTS.md §Perf — (c) the
 topology-aware collective: protected-tail size, sidecar wire overhead and
-top-k rank-preservation rate vs the plain compressed psum, and (d) the
-end-to-end train-step time of the compressed / topo-compressed shard_map
-paths vs the baseline (uncompressed bf16 all-reduce inserted by GSPMD).
+top-k rank-preservation rate vs the plain compressed psum, (d) the MEASURED
+packed-wire bytes of the dist.ring bitpacked ppermute all-reduce: the
+per-hop bytes each member actually packs (valid) and ships (static cap)
+vs the int32 ring reference — the ``packed_vs_int32`` regression gate —
+and (e) the end-to-end train-step time of the compressed /
+topo-compressed / packed-ring shard_map paths vs the baseline
+(uncompressed bf16 all-reduce inserted by GSPMD).
 
 Run under XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise a
 real multi-member data-parallel reduction; on a single device the psum is
@@ -31,6 +35,7 @@ from repro.dist.collectives import (code_bits, protect_k,
                                     topk_rank_preservation,
                                     topo_quantize_dequantize_sum,
                                     topo_wire_bits)
+from repro.dist.ring import packed_wire_summary, simulate_hop_bytes
 
 TOPO_FRAC = 1e-3          # protected-tail knob exercised by the benchmark
 RANK_TOP_K = 64           # tail size the rank-preservation rate reports
@@ -58,6 +63,7 @@ def run(smoke: bool = False):
             "rel": err / scale,
         })
         _bench_topo(gj, rel_eb, homo, direct)
+        _bench_packed_wire(gj, rel_eb)
 
     _bench_train_step(rel_eb=1e-3, smoke=smoke)
 
@@ -84,6 +90,30 @@ def _bench_topo(gj: jnp.ndarray, rel_eb: float, plain_homo: jnp.ndarray,
             topk_rank_preservation(direct, topo, RANK_TOP_K),
         f"rank_preservation_top{RANK_TOP_K}_plain":
             topk_rank_preservation(direct, plain_homo, RANK_TOP_K),
+    })
+
+
+def _bench_packed_wire(gj: jnp.ndarray, rel_eb: float):
+    """Measured bytes of the bitpacked ring wire on the member codes.
+
+    Replays the ring's per-hop partial-sum schedule and packs every
+    member's payload for real (``dist.ring.simulate_hop_bytes``): the
+    ``valid`` bytes are what the packed stream holds, the ``shipped``
+    bytes the statically-capped ppermute buffer, both vs the int32 ring
+    reference (4 bytes/value/hop).
+    """
+    from repro.core.quantize import quantize
+    eb = jnp.maximum(jnp.abs(gj).max() * rel_eb, 1e-30)
+    qs = quantize(gj, eb)
+    rec = simulate_hop_bytes(qs, rel_eb)
+    t = timeit(lambda: simulate_hop_bytes(quantize(gj, eb), rel_eb))
+    emit(f"gradcomp/packed_rel_eb{rel_eb:.0e}", t * 1e6, {
+        "hops": rec["hops"],
+        "valid_bytes_per_hop": rec["valid_bytes_per_hop"],
+        "shipped_bytes_per_hop": rec["shipped_bytes_per_hop"],
+        "int32_bytes_per_hop": rec["int32_bytes_per_hop"],
+        "valid_vs_int32": rec["valid_vs_int32"],
+        "shipped_vs_int32": rec["shipped_vs_int32"],
     })
 
 
@@ -128,6 +158,15 @@ def _bench_train_step(rel_eb: float, smoke: bool = False):
     assert np.isfinite(loss_t), "topo step produced non-finite loss"
     t_t = timeit(lambda: step_t(state_t, batch)[1]["loss"])
 
+    # packed ring: the bitpacked ppermute wire end-to-end
+    state_p = init_state(params, opt, grad_compress=True)
+    step_p = jax.jit(make_train_step(cfg, opt, mesh=mesh, grad_compress=True,
+                                     rel_eb=rel_eb, topo_frac=TOPO_FRAC,
+                                     wire_format="packed"))
+    loss_p = float(step_p(state_p, batch)[1]["loss"])
+    assert np.isfinite(loss_p), "packed step produced non-finite loss"
+    t_p = timeit(lambda: step_p(state_p, batch)[1]["loss"])
+
     # wire width of the REAL step gradients (size-weighted mean bits/value)
     grads = jax.jit(jax.grad(lambda p: lm.loss_fn(p, cfg, batch)))(params)
     leaves = [g.astype(jnp.float32) for g in jax.tree.leaves(grads)]
@@ -158,6 +197,18 @@ def _bench_train_step(rel_eb: float, smoke: bool = False):
         "sidecar_overhead_frac": side / (body + side),
         "wire_reduction_vs_bf16": 16 * total / (body + side),
         "loss": loss_t,
+    })
+    ring_model = packed_wire_summary([g.size for g in leaves], rel_eb,
+                                     TOPO_FRAC, n_dp)
+    emit("gradcomp/step_packed_ring", t_p * 1e6, {
+        "dp_members": n_dp,
+        "topo_frac": TOPO_FRAC,
+        "time_vs_uncompressed": t_p / t_b,
+        "time_vs_compressed": t_p / t_c,
+        "ring_hops": ring_model["hops"],
+        "packed_bytes_per_hop": ring_model["packed_bytes_per_hop"],
+        "packed_vs_int32_per_hop": ring_model["packed_vs_int32_per_hop"],
+        "loss": loss_p,
     })
 
 

@@ -66,6 +66,9 @@ class ArchConfig:
     grad_compress: bool = False       # hZCCL-style quantized DP all-reduce
     grad_topo_frac: float = 0.0       # TopoSZp protected top-|g| tail frac
                                       #   (0 = plain compressed psum)
+    grad_wire_format: str = "int32"   # "int32" (code psum, accounting-only
+                                      #   byte win) | "packed" (dist.ring
+                                      #   bitpacked ppermute ring all-reduce)
     # costing mode (roofline): scans counted once by XLA cost analysis, so
     # the dry-run lowers small-depth UNROLLED variants and extrapolates.
     unroll_groups: bool = False

@@ -30,8 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitpack
-from repro.core.critical_points import REGULAR, classify
-from repro.core.metrics import false_cases
+from repro.core.critical_points import classify
 from repro.core.quantize import dequantize, quantize
 from repro.core.szp import (DEFAULT_BLOCK, SZpParts, compress_codes,
                             decompress_codes)

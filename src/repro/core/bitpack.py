@@ -33,15 +33,35 @@ def block_nbytes(widths: jnp.ndarray, k: int) -> jnp.ndarray:
     return (k * widths + 7) // 8
 
 
-def pack_blocks(mags: jnp.ndarray, widths: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def sum_width(width: int, n_summands: int) -> int:
+    """Bit width that holds any sum of ``n_summands`` ``width``-bit magnitudes.
+
+    The block-width growth law of the ring all-reduce (dist/ring.py): a
+    partial sum over h members needs at most ``ceil(log2(h))`` extra bits
+    over the per-member width, capped at the 32-bit packing limit.
+    """
+    if n_summands <= 1:
+        return min(width, MAX_WIDTH)
+    return min(MAX_WIDTH, width + (n_summands - 1).bit_length())
+
+
+def pack_blocks(mags: jnp.ndarray, widths: jnp.ndarray,
+                max_width: int = MAX_WIDTH
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Pack per-block magnitudes at per-block bit widths.
 
     Args:
       mags:   (B, K) uint32/int32 magnitudes, each < 2**widths[b].
-      widths: (B,) int32 in [0, 32].
+      widths: (B,) int32 in [0, max_width].  Callers must guarantee the
+              bound; it sizes the static output buffer.
+      max_width: static cap on every entry of ``widths``.  The ring
+              all-reduce passes the deterministic per-hop bound here
+              (see :func:`sum_width`) so the shipped buffer shrinks with
+              the realizable width instead of the 32-bit worst case.
 
     Returns:
-      buf:    (cap,) uint8 packed stream (valid prefix only), cap = B*ceil(K*32/8)
+      buf:    (cap,) uint8 packed stream (valid prefix only),
+              cap = B*ceil(K*max_width/8)
       offs:   (B,) int32 exclusive byte offsets per block
       total:  () int32 total valid bytes
     """
@@ -50,7 +70,7 @@ def pack_blocks(mags: jnp.ndarray, widths: jnp.ndarray) -> Tuple[jnp.ndarray, jn
     nb = block_nbytes(widths, k)                       # (B,)
     offs = exclusive_cumsum(nb)                        # (B,)
     total = offs[-1] + nb[-1] if b_blocks > 0 else jnp.int32(0)
-    cap = b_blocks * ((k * MAX_WIDTH + 7) // 8)
+    cap = b_blocks * ((k * max_width + 7) // 8)
 
     j = jnp.arange(cap, dtype=jnp.int32)               # output byte index
     blk = jnp.searchsorted(offs, j, side="right") - 1  # block covering byte j
@@ -112,12 +132,14 @@ def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
     n = bits.shape[0]
     pad = (-n) % 8
     b = jnp.pad(bits.astype(jnp.uint32), (0, pad)).reshape(-1, 8)
-    return (b << jnp.arange(8, dtype=jnp.uint32)[None, :]).sum(axis=1).astype(jnp.uint8)
+    return (b << jnp.arange(8, dtype=jnp.uint32)[None, :]).sum(axis=1) \
+        .astype(jnp.uint8)
 
 
 def unpack_bits(buf: jnp.ndarray, n: int) -> jnp.ndarray:
     """Inverse of :func:`pack_bits`; returns (n,) uint8 of {0,1}."""
-    bits = (buf[:, None].astype(jnp.uint32) >> jnp.arange(8, dtype=jnp.uint32)[None, :]) & 1
+    bits = (buf[:, None].astype(jnp.uint32)
+            >> jnp.arange(8, dtype=jnp.uint32)[None, :]) & 1
     return bits.reshape(-1)[:n].astype(jnp.uint8)
 
 
@@ -126,10 +148,12 @@ def pack_2bit(vals: jnp.ndarray) -> jnp.ndarray:
     n = vals.shape[0]
     pad = (-n) % 4
     v = jnp.pad(vals.astype(jnp.uint32), (0, pad)).reshape(-1, 4)
-    return (v << (2 * jnp.arange(4, dtype=jnp.uint32))[None, :]).sum(axis=1).astype(jnp.uint8)
+    return (v << (2 * jnp.arange(4, dtype=jnp.uint32))[None, :]).sum(axis=1) \
+        .astype(jnp.uint8)
 
 
 def unpack_2bit(buf: jnp.ndarray, n: int) -> jnp.ndarray:
     """Inverse of :func:`pack_2bit`; returns (n,) int32 codes in 0..3."""
-    v = (buf[:, None].astype(jnp.uint32) >> (2 * jnp.arange(4, dtype=jnp.uint32))[None, :]) & 3
+    v = (buf[:, None].astype(jnp.uint32)
+         >> (2 * jnp.arange(4, dtype=jnp.uint32))[None, :]) & 3
     return v.reshape(-1)[:n].astype(jnp.int32)

@@ -21,7 +21,8 @@ from repro.utils import ulp_step
 
 
 def apply_extrema_stencils(recon: jnp.ndarray, labels: jnp.ndarray,
-                           ranks: jnp.ndarray, eb: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                           ranks: jnp.ndarray, eb: float
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Restore lost extrema on the SZp reconstruction.
 
     Args:

@@ -65,7 +65,8 @@ def compress_codes(codes: jnp.ndarray, block: int = DEFAULT_BLOCK) -> SZpParts:
                     first, payload, total, nbytes.astype(jnp.int32))
 
 
-def decompress_codes(parts: SZpParts, n: int, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+def decompress_codes(parts: SZpParts, n: int,
+                     block: int = DEFAULT_BLOCK) -> jnp.ndarray:
     """Invert :func:`compress_codes` -> (n,) int32 codes."""
     widths = parts.widths.astype(jnp.int32)
     nblocks = widths.shape[0]
@@ -97,7 +98,8 @@ def szp_decompress(parts: SZpParts, shape: Sequence[int], eb: float,
     return dequantize(codes, eb, recon=recon).reshape(shape)
 
 
-def szp_roundtrip(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK) -> Tuple[jnp.ndarray, SZpParts]:
+def szp_roundtrip(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK
+                  ) -> Tuple[jnp.ndarray, SZpParts]:
     parts = szp_compress(x, eb, block=block)
     return szp_decompress(parts, tuple(x.shape), eb, block=block), parts
 

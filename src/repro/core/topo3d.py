@@ -13,7 +13,7 @@ v1 (no RBF): suppression still guarantees FP = FT = 0 and the 2-eps bound.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from repro.core import bitpack
 from repro.core.quantize import dequantize, quantize
 from repro.core.relative_order import compute_ranks
-from repro.core.szp import DEFAULT_BLOCK, SZpParts, compress_codes, \
-    decompress_codes
+from repro.core.szp import (DEFAULT_BLOCK, compress_codes,
+                            decompress_codes)
 from repro.core.toposzp import (TopoSZpCompressed, _cp_first_order,
                                 rank_stream_bytes)
 from repro.utils import ulp_step

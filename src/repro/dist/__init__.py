@@ -3,11 +3,14 @@
 ``dist.sharding``    — NamedSharding rules for params / batches / caches
 ``dist.collectives`` — error-bounded compressed gradient psum (+EF),
                        topo-aware variant with an exact top-|g| sidecar
+``dist.ring``        — bitpacked ppermute ring all-reduce (the "packed"
+                       wire format: actual compressed bytes on the wire)
 ``dist.elastic``     — largest-valid-mesh rebuild after device loss
 ``dist.compat``      — shard_map shim across JAX versions
 """
-from repro.dist import collectives, compat, elastic, sharding
-from repro.dist.collectives import (code_bits, compressed_psum_tree,
+from repro.dist import collectives, compat, elastic, ring, sharding
+from repro.dist.collectives import (WIRE_FORMATS, code_bits,
+                                    compressed_psum_tree, max_code,
                                     protect_k, quantize_dequantize_sum,
                                     sidecar_bits, topk_rank_preservation,
                                     topo_compressed_psum_tree,
@@ -15,15 +18,19 @@ from repro.dist.collectives import (code_bits, compressed_psum_tree,
                                     topo_wire_bits)
 from repro.dist.compat import shard_map
 from repro.dist.elastic import largest_mesh_shape, rebuild_mesh
+from repro.dist.ring import (packed_psum_tree, packed_wire_summary,
+                             simulate_hop_bytes)
 from repro.dist.sharding import (batch_axes, cache_shardings, data_sharding,
                                  param_shardings, replicated)
 
 __all__ = [
-    "collectives", "compat", "elastic", "sharding",
-    "code_bits", "compressed_psum_tree", "quantize_dequantize_sum",
+    "collectives", "compat", "elastic", "ring", "sharding",
+    "WIRE_FORMATS", "code_bits", "compressed_psum_tree", "max_code",
+    "quantize_dequantize_sum",
     "protect_k", "sidecar_bits", "topk_rank_preservation",
     "topo_compressed_psum_tree", "topo_quantize_dequantize_sum",
     "topo_wire_bits",
+    "packed_psum_tree", "packed_wire_summary", "simulate_hop_bytes",
     "shard_map", "largest_mesh_shape", "rebuild_mesh",
     "batch_axes", "cache_shardings", "data_sharding", "param_shardings",
     "replicated",

@@ -33,8 +33,12 @@ quantized body keeps the ``n_members * eb`` homomorphic bound.
 The wire width of the codes (vs 16-bit bf16 values) is what
 ``code_bits`` accounts; ``sidecar_bits``/``topo_wire_bits`` add the
 sparse sidecar cost and benchmarks/bench_grad_compress.py reports the
-resulting byte reduction.  core/bitpack packs the codes for the on-disk
-format; on the wire the dry-run costs them at ``code_bits`` per value.
+resulting byte reduction.  With ``wire_format="int32"`` the psum still
+moves full int32 codes and the win is accounting-only; with
+``wire_format="packed"`` the collective runs dist/ring.py's bitpacked
+ppermute ring all-reduce and the packed uint8 buffers ARE the wire (the
+dryrun's HLO collective-permute parse costs the actual packed bytes
+moved per hop).
 """
 from __future__ import annotations
 
@@ -57,6 +61,24 @@ _EB_TINY = 1e-30
 SIDECAR_INDEX_BITS = 32
 SIDECAR_VALUE_BITS = 32
 
+INT32_MAX = 2**31 - 1
+
+# wire formats for the compressed collective: "int32" moves full int32
+# codes through jax.lax.psum (accounting-only win); "packed" runs the
+# bitpacked ppermute ring all-reduce of dist/ring.py.
+WIRE_FORMATS = ("int32", "packed")
+
+
+def max_code(rel_eb: float) -> int:
+    """Static bound on any per-member code magnitude at ``rel_eb``.
+
+    ``|q| = |floor((x + eb) / (2 eb))| <= max|x| / (2 eb) + 1`` and the
+    pmax-shared ``eb = rel_eb * pmax|x|`` gives ``|q| <= 1/(2 rel_eb) + 1``
+    (+1 slack for f32 rounding of the encoder).  Known at trace time, so
+    overflow handling below is static.
+    """
+    return int(1.0 / (2.0 * rel_eb)) + 2
+
 
 def _leaf_eb(x: jnp.ndarray, rel_eb: float,
              axes: Optional[AxisNames] = None) -> jnp.ndarray:
@@ -65,6 +87,63 @@ def _leaf_eb(x: jnp.ndarray, rel_eb: float,
     if axes:
         scale = jax.lax.pmax(scale, axes)
     return jnp.maximum(scale * rel_eb, _EB_TINY)
+
+
+def _check_code_range(rel_eb: float) -> int:
+    """Trace-time guard: per-member codes themselves must fit int32."""
+    q_max = max_code(rel_eb)
+    if q_max > INT32_MAX:
+        raise ValueError(
+            f"rel_eb={rel_eb:g} is too small: per-member codes reach "
+            f"~{q_max:.3g} and overflow int32 in quantize() before any "
+            f"sum; use rel_eb > {1.0 / (2.0 * (INT32_MAX - 2)):.2g}")
+    return q_max
+
+
+# hi/lo widening limit: the lo sums reach n * (2**16 - 1), which itself
+# overflows int32 past this member count.
+_MAX_WIDEN_MEMBERS = 32768
+
+
+def _split_hi_lo(q: jnp.ndarray, n_members: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact int32 -> (hi, lo) with q == hi * 2**16 + lo, 0 <= lo < 2**16.
+
+    Summing hi and lo separately widens the accumulation: member sums
+    stay exact where a raw int32 sum of large codes (tiny ``rel_eb``)
+    silently wraps — up to ``_MAX_WIDEN_MEMBERS`` members, past which
+    the lo sums would wrap too, so that raises instead of degrading to
+    the silent-wrap class this widening exists to close.
+    """
+    if n_members > _MAX_WIDEN_MEMBERS:
+        raise ValueError(
+            f"hi/lo-widened code sum supports at most "
+            f"{_MAX_WIDEN_MEMBERS} members (lo sums would overflow "
+            f"int32); got {n_members} — raise rel_eb so codes fit a raw "
+            f"int32 sum, or reduce the data-parallel degree")
+    return q >> 16, q & 0xFFFF
+
+
+def _dequantize_wide(hi_sum: jnp.ndarray, lo_sum: jnp.ndarray,
+                     eb: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize a hi/lo-widened code sum: (hi*2**16 + lo) * 2eb in f32."""
+    two_eb = 2.0 * eb
+    return (hi_sum.astype(jnp.float32) * (two_eb * 65536.0)
+            + lo_sum.astype(jnp.float32) * two_eb)
+
+
+def _residual(ge: jnp.ndarray, deq: jnp.ndarray) -> jnp.ndarray:
+    """Error-feedback residual ``ge - deq`` with pinned f32 rounding.
+
+    Written naively, XLA may contract the subtract with the multiply
+    inside ``deq = q * 2eb`` into an FMA — or not — depending on fusion
+    context, so the int32 and packed wire formats could disagree in the
+    last ulp of the error feedback.  Adding ``ge * 0.0`` (never folded
+    under default float semantics, and exactly zero here) makes the
+    subtrahend an add rather than a mul, which pins both lowerings to
+    the same double-rounded result.
+    """
+    return ge - (deq + ge * 0.0)
 
 
 def code_bits(g: jnp.ndarray, rel_eb: float) -> jnp.ndarray:
@@ -116,10 +195,15 @@ def topk_rank_preservation(direct: jnp.ndarray, approx: jnp.ndarray,
     Ranks come from a double argsort over the selected entries (the dense
     ranking idiom of core/relative_order.py); an entry counts as preserved
     when its descending-value rank in ``approx`` equals its rank in
-    ``direct``.
+    ``direct``.  ``k`` is clamped to the flattened size (callers often
+    pass a tree-level k to small leaves); ``k <= 0`` vacuously preserves
+    everything and returns 1.0.
     """
     d = direct.reshape(-1).astype(jnp.float32)
     a = approx.reshape(-1).astype(jnp.float32)
+    k = min(int(k), d.shape[0])
+    if k <= 0:
+        return 1.0
     idx = jax.lax.top_k(jnp.abs(d), k)[1]
     dvals, avals = d[idx], a[idx]
     drank = jnp.argsort(jnp.argsort(-dvals))
@@ -138,11 +222,22 @@ def quantize_dequantize_sum(xs: jnp.ndarray, rel_eb: float
     xs: (n_members, ...) stacked per-member values.  Returns
     ``(dequant(sum_i quant(xs[i])), sum_i xs[i])``; the two differ by at
     most ``n_members * rel_eb * max|xs|`` per element.
+
+    At tiny ``rel_eb`` per-member codes reach ``~1/(2 rel_eb)`` and a raw
+    int32 sum over the members silently wraps; when ``n * max_code`` can
+    exceed int32 the accumulation is widened via a hi/lo split (the sums
+    stay exact; only the final fp32 dequantization rounds).
     """
     xs = xs.astype(jnp.float32)
+    n = xs.shape[0]
+    q_max = _check_code_range(rel_eb)
     eb = _leaf_eb(xs, rel_eb)
     q = quantize(xs, eb)
-    homo = dequantize(q.sum(axis=0), eb)
+    if n * q_max > INT32_MAX:
+        hi, lo = _split_hi_lo(q, n)
+        homo = _dequantize_wide(hi.sum(axis=0), lo.sum(axis=0), eb)
+    else:
+        homo = dequantize(q.sum(axis=0), eb)
     return homo, xs.sum(axis=0)
 
 
@@ -164,9 +259,14 @@ def topo_quantize_dequantize_sum(
     flat = xs.reshape(n, -1)
     size = flat.shape[1]
     k = protect_k(size, topo_frac)
+    q_max = _check_code_range(rel_eb)
     eb = _leaf_eb(xs, rel_eb)
     q = quantize(flat, eb)
-    body = dequantize(q.sum(axis=0), eb)
+    if n * q_max > INT32_MAX:
+        hi, lo = _split_hi_lo(q, n)
+        body = _dequantize_wide(hi.sum(axis=0), lo.sum(axis=0), eb)
+    else:
+        body = dequantize(q.sum(axis=0), eb)
     direct = flat.sum(axis=0)
     if k == 0:
         protected = jnp.zeros((0,), jnp.int32)
@@ -195,8 +295,18 @@ def _psum_leaf(g: jnp.ndarray, e: Optional[jnp.ndarray],
     flat = ge.reshape(-1)
     q = quantize(flat, eb)
     deq = dequantize(q, eb)
-    gsum = dequantize(jax.lax.psum(q, axes), eb)
-    new_e = flat - deq
+    q_max = _check_code_range(rel_eb)
+    n_static = int(jax.lax.psum(1, axes))     # static member count
+    if n_static * q_max > INT32_MAX:
+        # tiny rel_eb: an int32 psum of the codes would silently wrap and
+        # break the n*eb bound — psum a hi/lo split instead (exact sums,
+        # 2x code wire; wire_format="packed" raises rather than widen).
+        hi, lo = _split_hi_lo(q, n_static)
+        gsum = _dequantize_wide(jax.lax.psum(hi, axes),
+                                jax.lax.psum(lo, axes), eb)
+    else:
+        gsum = dequantize(jax.lax.psum(q, axes), eb)
+    new_e = _residual(flat, deq)
     k = protect_k(flat.shape[0], topo_frac)
     if k > 0:
         # CD stage on the gradient: each member's local protected tail.
@@ -218,8 +328,15 @@ def _psum_leaf(g: jnp.ndarray, e: Optional[jnp.ndarray],
 
 
 def _psum_tree(grads: Any, axes: AxisNames, rel_eb: float,
-               err: Optional[Any], topo_frac: float) -> Tuple[Any, Any]:
+               err: Optional[Any], topo_frac: float,
+               wire_format: str = "int32") -> Tuple[Any, Any]:
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    if wire_format not in WIRE_FORMATS:
+        raise ValueError(f"unknown wire_format {wire_format!r}; "
+                         f"expected one of {WIRE_FORMATS}")
+    if wire_format == "packed":
+        from repro.dist.ring import packed_psum_tree   # lazy: circular import
+        return packed_psum_tree(grads, axes, rel_eb, err, topo_frac)
     n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
     leaves_g, treedef = jax.tree.flatten(grads)
     leaves_e = ([None] * len(leaves_g) if err is None
@@ -236,20 +353,27 @@ def _psum_tree(grads: Any, axes: AxisNames, rel_eb: float,
 
 
 def compressed_psum_tree(grads: Any, axes: AxisNames, rel_eb: float = 1e-3,
-                         err: Optional[Any] = None) -> Tuple[Any, Any]:
+                         err: Optional[Any] = None,
+                         wire_format: str = "int32") -> Tuple[Any, Any]:
     """Error-bounded compressed psum over a gradient pytree.
 
     Must run inside a shard_map context where ``axes`` are manual mesh
     axes.  Returns ``(mean gradient tree, new error-feedback tree)``; the
     mean differs from the direct ``pmean`` by at most ``rel_eb *
     pmax|g + err|`` per leaf element (n_members * eb summed, / n_members).
+
+    ``wire_format="packed"`` swaps the int32 code psum for the bitpacked
+    ppermute ring all-reduce (dist/ring.py) — same results, actual packed
+    bytes on the wire.
     """
-    return _psum_tree(grads, axes, rel_eb, err, topo_frac=0.0)
+    return _psum_tree(grads, axes, rel_eb, err, topo_frac=0.0,
+                      wire_format=wire_format)
 
 
 def topo_compressed_psum_tree(grads: Any, axes: AxisNames,
                               rel_eb: float = 1e-3, topo_frac: float = 1e-3,
-                              err: Optional[Any] = None) -> Tuple[Any, Any]:
+                              err: Optional[Any] = None,
+                              wire_format: str = "int32") -> Tuple[Any, Any]:
     """Topology-aware compressed psum: exact top-|g| tail + bounded body.
 
     Same contract as :func:`compressed_psum_tree` plus, per leaf, the
@@ -265,6 +389,9 @@ def topo_compressed_psum_tree(grads: Any, axes: AxisNames,
 
     Wire cost: ``code_bits`` per body value plus ``sidecar_bits(size,
     topo_frac, n_members)`` per member per leaf (< 5% overhead at
-    ``topo_frac = 1e-3`` for typical 8–12-bit bodies).
+    ``topo_frac = 1e-3`` for typical 8–12-bit bodies).  With
+    ``wire_format="packed"`` the sidecar's (index, value) pairs ride the
+    bitpacked ring buffers instead of a separate all-gather + psum.
     """
-    return _psum_tree(grads, axes, rel_eb, err, topo_frac=topo_frac)
+    return _psum_tree(grads, axes, rel_eb, err, topo_frac=topo_frac,
+                      wire_format=wire_format)

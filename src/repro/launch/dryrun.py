@@ -125,7 +125,9 @@ def _lower_cell(cfg, shape_name, mesh):
                                      cfg.sharding_strategy)
         from repro.train.step import make_train_step
         step = make_train_step(cfg, optimizer, mesh=mesh, grad_compress=gc,
-                               topo_frac=getattr(cfg, "grad_topo_frac", 0.0))
+                               topo_frac=getattr(cfg, "grad_topo_frac", 0.0),
+                               wire_format=getattr(cfg, "grad_wire_format",
+                                                   "int32"))
         jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
                          out_shardings=(state_sh, None),
                          donate_argnums=(0,))
@@ -154,6 +156,47 @@ def _lower_cell(cfg, shape_name, mesh):
         out_shardings=(None, None, cache_sh),
         donate_argnums=(2,))
     return jitted.lower(params_sds, specs["tokens"], specs["caches"])
+
+
+def _grad_wire_model(cfg, mesh, rel_eb: float = 1e-3) -> dict:
+    """Analytic compressed-gradient wire model for one train cell.
+
+    The old model costed the compressed wire at ``code_bits`` per value
+    only; this one uses the ``topo_wire_bits`` decomposition (quantized
+    body + exact sidecar, which ``grad_topo_frac > 0`` adds) and, for
+    ``grad_wire_format="packed"``, the ACTUAL packed bytes the ring moves
+    per hop (``dist.ring.packed_wire_summary`` — the same buffer sizes
+    the compiled HLO's collective-permutes carry).  ``rel_eb`` mirrors
+    the ``make_train_step`` default the dry-run lowers with.
+    """
+    from repro.dist import ring
+    from repro.dist.collectives import sidecar_bits
+    from repro.dist.sharding import batch_axes
+
+    n_dp = 1
+    for a in batch_axes(mesh):
+        n_dp *= int(mesh.shape[a])
+    topo_frac = getattr(cfg, "grad_topo_frac", 0.0)
+    wire_format = getattr(cfg, "grad_wire_format", "int32")
+    params_sds = _params_specs(cfg)
+    sizes = [int(x.size) for x in jax.tree.leaves(params_sds)]
+    body_bits = ring.base_width(rel_eb) + 1       # static bound incl. sign
+    body = sum(body_bits * s for s in sizes)
+    side = sum(sidecar_bits(s, topo_frac, n_dp) for s in sizes)
+    rec = {
+        "wire_format": wire_format,
+        "rel_eb": rel_eb,
+        "topo_frac": topo_frac,
+        "n_dp": n_dp,
+        "body_bits_per_val": body_bits,
+        "body_bits_per_member": body,
+        "sidecar_bits_per_member": side,
+        "topo_wire_bits_per_member": body + side,
+    }
+    if wire_format == "packed" and len(batch_axes(mesh)) == 1:
+        rec["packed"] = ring.packed_wire_summary(sizes, rel_eb, topo_frac,
+                                                 n_dp)
+    return rec
 
 
 def _costing_cfg(cfg, n_groups: int):
@@ -195,7 +238,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, mesh=None,
         multi_pod=multi_pod)
     cfg = cfg if cfg is not None else registry.get_config(arch)
     sc = SHAPES[shape_name]
-    set_active_mesh(mesh)
+    # Legacy XLA runs the compressed-DP step fully manual; the models'
+    # 'model'-axis sharding constraints are illegal inside that manual
+    # context, so leave the active mesh unset there (same degradation as
+    # launch.train: model-axis compute replicated per DP shard).
+    from repro.dist.compat import HAS_PARTIAL_AUTO
+    if (sc.mode != "train" or not getattr(cfg, "grad_compress", False)
+            or HAS_PARTIAL_AUTO):
+        set_active_mesh(mesh)
+    else:
+        set_active_mesh(None)
 
     with mesh:
         lowered = _lower_cell(cfg, shape_name, mesh)
@@ -218,11 +270,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, mesh=None,
             except Exception as e:
                 costing_rec = {"error": str(e)[:300]}
 
+    grad_wire = None
+    if sc.mode == "train" and getattr(cfg, "grad_compress", False):
+        try:
+            grad_wire = _grad_wire_model(cfg, mesh)
+        except Exception as e:
+            grad_wire = {"error": str(e)[:300]}
+
     record = {
         "arch": arch, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
         "n_devices": int(n_dev),
         "mode": sc.mode,
+        "grad_wire": grad_wire,
         "lower_s": round(t_lower - t_start, 2),
         "compile_s": round(t_compile - t_lower, 2),
         "memory": _mem_dict(mem),

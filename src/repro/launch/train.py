@@ -9,7 +9,6 @@ production mesh would launch:
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +38,11 @@ def main():
                     help="protected top-|g| tail fraction (TopoSZp-aware "
                          "collective); 0 forces the plain compressed psum, "
                          "unset defers to cfg.grad_topo_frac")
+    ap.add_argument("--wire-format", choices=["int32", "packed"],
+                    default=None,
+                    help="compressed-collective wire: int32 code psum or "
+                         "the dist.ring bitpacked ppermute ring all-reduce; "
+                         "unset defers to cfg.grad_wire_format")
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
@@ -65,7 +69,8 @@ def main():
     step_fn = make_train_step(cfg, optimizer, mesh=mesh,
                               grad_compress=args.grad_compress,
                               rel_eb=args.rel_eb,
-                              topo_frac=args.topo_frac)
+                              topo_frac=args.topo_frac,
+                              wire_format=args.wire_format)
 
     def batches():
         for b in token_batches(cfg, args.batch, args.seq, seed=args.seed,

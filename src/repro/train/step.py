@@ -8,14 +8,13 @@ quantizer on the wire (error-bounded, error-feedback).  See DESIGN.md §2.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.collectives import (compressed_psum_tree,
+from repro.dist.collectives import (WIRE_FORMATS, compressed_psum_tree,
                                     topo_compressed_psum_tree)
 from repro.dist.compat import HAS_PARTIAL_AUTO, shard_map
 from repro.dist.sharding import batch_axes
@@ -31,7 +30,8 @@ def make_loss_fn(cfg) -> Callable:
 
 def make_train_step(cfg, optimizer, mesh=None, grad_compress: bool = False,
                     rel_eb: float = 1e-3,
-                    topo_frac: Optional[float] = None) -> Callable:
+                    topo_frac: Optional[float] = None,
+                    wire_format: Optional[str] = None) -> Callable:
     """Returns step(state, batch) -> (state', metrics).
 
     ``topo_frac > 0`` upgrades the compressed DP reduction to the
@@ -41,15 +41,29 @@ def make_train_step(cfg, optimizer, mesh=None, grad_compress: bool = False,
     while the body stays ``rel_eb``-bounded.  ``None`` (default) defers
     to ``cfg.grad_topo_frac``; an explicit ``0.0`` forces the plain
     compressed psum regardless of the config.
+
+    ``wire_format`` picks how the codes move: ``"int32"`` (full int32
+    psum, accounting-only byte win) or ``"packed"`` (dist.ring bitpacked
+    ppermute ring all-reduce — the compressed bytes ARE the wire).
+    ``None`` defers to ``cfg.grad_wire_format``.
     """
     loss_fn = make_loss_fn(cfg)
     if topo_frac is None:
         topo_frac = getattr(cfg, "grad_topo_frac", 0.0)
+    if wire_format is None:
+        wire_format = getattr(cfg, "grad_wire_format", "int32")
+    if wire_format not in WIRE_FORMATS:
+        raise ValueError(f"unknown wire_format {wire_format!r}; "
+                         f"expected one of {WIRE_FORMATS}")
     if topo_frac > 0.0 and not grad_compress:
         raise ValueError(
             "topo_frac > 0 requires grad_compress=True: the protected "
             "tail is a sidecar of the compressed collective, not of the "
             "uncompressed GSPMD all-reduce")
+    if wire_format != "int32" and not grad_compress:
+        raise ValueError(
+            "wire_format='packed' requires grad_compress=True: only the "
+            "compressed collective has codes to bitpack")
 
     if not grad_compress:
         def step(state: TrainState, batch):
@@ -72,10 +86,12 @@ def make_train_step(cfg, optimizer, mesh=None, grad_compress: bool = False,
         # local-shard loss/grads; 'model' axis stays auto-parallel
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         if topo_frac > 0.0:
-            grads, err = topo_compressed_psum_tree(grads, dp_axes, rel_eb,
-                                                   topo_frac, err)
+            grads, err = topo_compressed_psum_tree(
+                grads, dp_axes, rel_eb, topo_frac, err,
+                wire_format=wire_format)
         else:
-            grads, err = compressed_psum_tree(grads, dp_axes, rel_eb, err)
+            grads, err = compressed_psum_tree(grads, dp_axes, rel_eb, err,
+                                              wire_format=wire_format)
         loss = jax.lax.pmean(loss, dp_axes)
         # NOTE: err is genuinely per-DP-member but leaves through
         # out_specs=P() (check_vma=False).  On-device across steps each

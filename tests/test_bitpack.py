@@ -37,6 +37,91 @@ def test_zero_width_blocks_cost_nothing():
     assert int(total) == 0
 
 
+def test_zero_width_adjacent_to_nonzero_blocks():
+    """Zero-width blocks between nonzero ones duplicate byte offsets; the
+    searchsorted byte->block map must hand those bytes to the LAST block
+    at the offset (side='right'), not the empty one."""
+    k = 16
+    widths = np.array([3, 0, 0, 5, 0, 2, 0], np.int32)
+    rng = np.random.default_rng(0)
+    mags = np.zeros((widths.size, k), np.uint32)
+    for i, w in enumerate(widths):
+        if w > 0:
+            mags[i] = rng.integers(0, 2 ** int(w), k)
+    buf, offs, total = bitpack.pack_blocks(jnp.asarray(mags),
+                                           jnp.asarray(widths))
+    # duplicate offsets exist (the degenerate case under test)
+    assert len(set(np.asarray(offs).tolist())) < widths.size
+    out = bitpack.unpack_blocks(buf, jnp.asarray(widths), k)
+    assert np.array_equal(np.asarray(out), mags)
+    assert int(total) == sum((k * int(w) + 7) // 8 for w in widths)
+
+
+def test_full_width_32_mask_path():
+    """w=32 blocks exercise the mask-everything branch (1<<32 would wrap)."""
+    k = 8
+    rng = np.random.default_rng(1)
+    mags = rng.integers(0, 2 ** 32, (4, k), dtype=np.uint64).astype(np.uint32)
+    mags[0, 0] = 0xFFFFFFFF
+    widths = jnp.full((4,), 32, jnp.int32)
+    buf, _, total = bitpack.pack_blocks(jnp.asarray(mags), widths)
+    out = bitpack.unpack_blocks(buf, widths, k)
+    assert np.array_equal(np.asarray(out), mags)
+    assert int(total) == 4 * 4 * k
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 33), st.integers(1, 12))
+def test_property_pack_unpack_roundtrip(seed, k, b):
+    """unpack_blocks(pack_blocks(m, w)) == m for arbitrary widths 0..32."""
+    rng = np.random.default_rng(seed)
+    widths = rng.integers(0, 33, b).astype(np.int32)
+    mags = np.zeros((b, k), np.uint32)
+    for i, w in enumerate(widths):
+        if w > 0:
+            mags[i] = rng.integers(0, 2 ** min(int(w), 32), k,
+                                   dtype=np.uint64)
+    buf, _, _ = bitpack.pack_blocks(jnp.asarray(mags), jnp.asarray(widths))
+    out = bitpack.unpack_blocks(buf, jnp.asarray(widths), k)
+    assert np.array_equal(np.asarray(out), mags)
+
+
+@pytest.mark.parametrize("max_width", [1, 7, 11, 32])
+def test_pack_blocks_static_width_cap(max_width):
+    """The ring's static cap shrinks the shipped buffer without changing
+    the packed bytes: capped pack == full pack's valid prefix."""
+    k, b = 32, 9
+    rng = np.random.default_rng(max_width)
+    widths = rng.integers(0, max_width + 1, b).astype(np.int32)
+    mags = np.zeros((b, k), np.uint32)
+    for i, w in enumerate(widths):
+        if w > 0:
+            mags[i] = rng.integers(0, 2 ** int(w), k)
+    full, _, total = bitpack.pack_blocks(jnp.asarray(mags),
+                                         jnp.asarray(widths))
+    capped, _, total2 = bitpack.pack_blocks(jnp.asarray(mags),
+                                            jnp.asarray(widths),
+                                            max_width=max_width)
+    assert int(total) == int(total2)
+    assert capped.shape[0] == b * ((k * max_width + 7) // 8)
+    assert capped.shape[0] <= full.shape[0]
+    assert np.array_equal(np.asarray(full)[:int(total)],
+                          np.asarray(capped)[:int(total)])
+    out = bitpack.unpack_blocks(capped, jnp.asarray(widths), k)
+    assert np.array_equal(np.asarray(out), mags)
+
+
+def test_sum_width_growth_law():
+    """Partial sums over h members need ceil(log2(h)) extra bits."""
+    assert bitpack.sum_width(6, 1) == 6
+    assert bitpack.sum_width(6, 2) == 7
+    assert bitpack.sum_width(6, 3) == 8
+    assert bitpack.sum_width(6, 4) == 8
+    assert bitpack.sum_width(6, 5) == 9
+    assert bitpack.sum_width(30, 8) == 32    # capped at the packing limit
+    assert bitpack.sum_width(33, 1) == 32
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.integers(0, 255), st.integers(1, 64))
 def test_bits_roundtrip(seed, n):

@@ -61,6 +61,87 @@ def test_all_zero_members_safe():
     assert float(jnp.abs(direct).max()) == 0.0
 
 
+def test_overflow_widened_at_tiny_rel_eb():
+    """Regression: at rel_eb=1e-9 per-member codes are ~5e8 so an 8-member
+    int32 code sum reaches 4e9 and silently wraps (the pre-fix path
+    returned ~-0.29 here); the widened hi/lo accumulation recovers the
+    true sum."""
+    xs = jnp.full((8, 64), 0.5, jnp.float32)
+    homo, direct = quantize_dequantize_sum(xs, rel_eb=1e-9)
+    assert float(jnp.abs(direct - 4.0).max()) == 0.0
+    assert float(jnp.abs(homo - 4.0).max()) < 1e-3, float(homo[0])
+
+
+def test_overflow_widening_keeps_moderate_path_bitwise():
+    """Widening must only engage when n * max_code can overflow: at
+    ordinary rel_eb the raw int32 sum is still used (bit-identical)."""
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.standard_normal((8, 512)).astype(np.float32))
+    homo, _ = quantize_dequantize_sum(xs, rel_eb=1e-3)
+    from repro.core.quantize import dequantize, quantize
+    from repro.dist.collectives import _leaf_eb
+    eb = _leaf_eb(xs, 1e-3)
+    ref = dequantize(quantize(xs, eb).sum(axis=0), eb)
+    assert np.array_equal(np.asarray(homo), np.asarray(ref))
+
+
+def test_rel_eb_too_small_raises():
+    """Codes that overflow int32 in quantize() itself fail loudly."""
+    xs = jnp.ones((2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="too small"):
+        quantize_dequantize_sum(xs, rel_eb=1e-11)
+
+
+def test_topo_sum_also_widened_at_tiny_rel_eb():
+    """The topo variant's body sum takes the same widened path (it
+    wrapped to ~-0.29 pre-fix, like the plain sum)."""
+    xs = jnp.full((8, 64), 0.5, jnp.float32)
+    topo, direct, prot = topo_quantize_dequantize_sum(xs, rel_eb=1e-9,
+                                                      topo_frac=1e-2)
+    body = np.delete(np.asarray(topo), np.asarray(prot))
+    assert float(np.abs(body - 4.0).max()) < 1e-3, body[:4]
+    assert np.array_equal(np.asarray(topo)[np.asarray(prot)],
+                          np.asarray(direct)[np.asarray(prot)])
+    with pytest.raises(ValueError, match="too small"):
+        topo_quantize_dequantize_sum(xs, rel_eb=1e-11, topo_frac=1e-2)
+
+
+def test_widening_member_limit_raises():
+    """Past 2**15 members the lo sums would wrap int32 too: the widened
+    path must refuse rather than reintroduce the silent wrap."""
+    from repro.dist.collectives import _MAX_WIDEN_MEMBERS, _split_hi_lo
+    q = jnp.ones((4,), jnp.int32)
+    _split_hi_lo(q, _MAX_WIDEN_MEMBERS)          # boundary still exact
+    with pytest.raises(ValueError, match="members"):
+        _split_hi_lo(q, _MAX_WIDEN_MEMBERS + 1)
+
+
+def test_rank_preservation_clamps_k():
+    """Tree-level k larger than a small leaf must clamp, not crash."""
+    d = jnp.asarray(np.array([5.0, 4.0, 3.0], np.float32))
+    assert topk_rank_preservation(d, d, 64) == 1.0
+    assert topk_rank_preservation(d, d, 0) == 1.0
+    assert topk_rank_preservation(d, d, -3) == 1.0
+    swapped = jnp.asarray(np.array([4.0, 5.0, 3.0], np.float32))
+    assert topk_rank_preservation(d, swapped, 100) == pytest.approx(1 / 3)
+
+
+def test_unknown_wire_format_raises():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    import jax
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.dist.collectives import compressed_psum_tree
+    from repro.dist.compat import shard_map
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="wire_format"):
+        jax.jit(shard_map(
+            lambda x: compressed_psum_tree({"g": x.reshape(-1)}, "data",
+                                           wire_format="gzip")[0]["g"],
+            mesh=mesh, in_specs=P("data"), out_specs=P(),
+            check_vma=False))(g.reshape(1, -1))
+
+
 def test_code_bits_monotone_in_eb():
     rng = np.random.default_rng(0)
     g = jnp.asarray((rng.standard_normal(4096) * 1e-3).astype(np.float32))
