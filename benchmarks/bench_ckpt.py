@@ -1,0 +1,136 @@
+"""Checkpoint-subsystem benchmark (repro.ckpt v2).
+
+Measures, on an optimizer-moment-shaped state tree (smooth f32 fields —
+the data the paper's topology guarantees are about — plus small exact
+leaves):
+
+  (a) write + restore wall time per leaf mode (raw / szp / toposzp);
+  (b) on-disk bytes per mode and the ratio vs raw — the compressed
+      checkpoint win with the topology metadata overhead included;
+  (c) the TopoSZp restore error (deterministic: must stay within the
+      relaxed 2*eb bound, gated at exactly that);
+  (d) the step-loop overlap win of the async writer: the per-``ckpt_every``
+      stall the step loop observes with the synchronous writer (full
+      serialize+fsync on the loop thread) vs the async writer (device->host
+      snapshot only, serialize+fsync on a background thread) —
+      ``stall_vs_sync`` is the machine-independent regression gate.
+
+``--json PATH`` writes the versioned results file for
+``benchmarks/check_regression.py`` (baseline: baseline_ckpt.json);
+``--smoke`` shrinks the state for CI wall-clock.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, reset_records, timeit, write_json
+from repro.ckpt import CheckpointManager
+
+EB = 1e-3
+MODES = ("raw", "szp", "toposzp")
+
+
+def _state_tree(smoke: bool):
+    """Optimizer-moment-like tree: smooth fields + noise (seeded)."""
+    ny, nx = (256, 256) if smoke else (1024, 1024)
+    rng = np.random.default_rng(0)
+    y, x = np.meshgrid(np.linspace(0, 6 * np.pi, ny),
+                       np.linspace(0, 6 * np.pi, nx), indexing="ij")
+    base = np.sin(x) * np.cos(y)
+    tree = {}
+    for i, name in enumerate(("master", "m", "v")):
+        f = (base * (1.0 + 0.1 * i)
+             + 0.05 * rng.standard_normal((ny, nx))).astype(np.float32)
+        tree[name] = jnp.asarray(np.abs(f) if name == "v" else f)
+    tree["step"] = jnp.int32(123)
+    tree["small"] = jnp.ones((16,), jnp.float32)
+    return tree
+
+
+def _dir_bytes(path: str) -> int:
+    return sum(os.path.getsize(os.path.join(r, f))
+               for r, _, fs in os.walk(path) for f in fs)
+
+
+def _bench_modes(tree, workdir: str):
+    raw_disk = None
+    for mode in MODES:
+        d = os.path.join(workdir, mode)
+        mgr = CheckpointManager(d, mode=mode, eb=EB, async_write=False,
+                                log=None, keep=None)
+        t_write = timeit(lambda m=mgr: m.save(tree, 1))
+        path = os.path.join(d, "step_00000001")
+        disk = _dir_bytes(path)
+        if mode == "raw":
+            raw_disk = disk
+        t_restore = timeit(lambda m=mgr: m.restore(tree))
+        res = mgr.restore(tree)
+        max_err = max(float(jnp.abs(res.tree[k] - tree[k]).max())
+                      for k in ("master", "m", "v"))
+        emit(f"ckpt/write_{mode}", t_write * 1e6,
+             {"disk_bytes": disk, "bytes_vs_raw": disk / raw_disk})
+        emit(f"ckpt/restore_{mode}", t_restore * 1e6,
+             {"max_abs_err": max_err, "eb": EB})
+
+
+def _bench_async_overlap(tree, workdir: str, n_ckpts: int = 6,
+                         steps_between: int = 5, step_ms: float = 10.0):
+    """Per-checkpoint stall of the step loop, sync vs async writer.
+
+    The fake step sleeps (GIL released) so the background writer overlaps
+    exactly like a real device-bound step would."""
+    def run(async_write: bool) -> float:
+        d = os.path.join(workdir, f"overlap_{int(async_write)}")
+        shutil.rmtree(d, ignore_errors=True)
+        mgr = CheckpointManager(d, mode="raw", async_write=async_write,
+                                log=None)
+        stalls = []
+        for step in range(1, n_ckpts + 1):
+            for _ in range(steps_between):
+                time.sleep(step_ms / 1e3)
+            t0 = time.perf_counter()
+            mgr.save(tree, step)
+            stalls.append(time.perf_counter() - t0)
+        mgr.wait()
+        return float(np.median(stalls[1:]))   # drop the cold first write
+
+    sync_stall = run(async_write=False)
+    async_stall = run(async_write=True)
+    emit("ckpt/async_overlap", async_stall * 1e6,
+         {"sync_stall_us": sync_stall * 1e6,
+          "async_stall_us": async_stall * 1e6,
+          "stall_vs_sync": async_stall / sync_stall})
+
+
+def run(smoke: bool = False):
+    tree = _state_tree(smoke)
+    workdir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        _bench_modes(tree, workdir)
+        _bench_async_overlap(tree, workdir)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI wall-clock")
+    args = ap.parse_args()
+    reset_records()
+    run(smoke=args.smoke)
+    if args.json:
+        write_json(args.json, "bench_ckpt", smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,8 @@
-from repro.ckpt.manager import save, restore, latest_step, prune
+from repro.ckpt.manager import (CheckpointManager, RestoreResult, latest_step,
+                                prune, restore, save)
+from repro.ckpt.manifest import LOSSY_MODES, MODES, TreeMismatchError
+from repro.ckpt.async_writer import AsyncWriter
 
-__all__ = ["save", "restore", "latest_step", "prune"]
+__all__ = ["save", "restore", "latest_step", "prune",
+           "CheckpointManager", "RestoreResult", "AsyncWriter",
+           "TreeMismatchError", "MODES", "LOSSY_MODES"]

@@ -1,0 +1,55 @@
+"""Single-slot background checkpoint writer.
+
+The save path splits into a cheap synchronous half (device -> host shard
+snapshot, see ``sharded.snapshot_tree``) and the expensive half (compress,
+hash, write, fsync, atomic rename) which runs here on a daemon thread so
+``ckpt_every`` no longer stalls the step loop.  One write may be in flight
+at a time: submitting the next checkpoint first waits for the previous one
+(the only barrier the step loop ever sees — in steady state the previous
+write finished during the intervening steps and the wait is free).
+
+Exceptions from the background write are re-raised on the NEXT ``wait()``
+/ ``submit()`` so a failing disk surfaces in the step loop rather than
+being lost with the thread.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional
+
+
+class AsyncWriter:
+    def __init__(self) -> None:
+        self._thread: Optional[threading.Thread] = None
+        self._result: Any = None
+        self._exc: Optional[BaseException] = None
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def submit(self, fn: Callable[[], Any]) -> None:
+        """Run ``fn`` in the background; barriers on the previous write."""
+        self.wait()
+
+        def run() -> None:
+            try:
+                self._result = fn()
+            except BaseException as e:     # re-raised on the next wait()
+                self._exc = e
+
+        self._thread = threading.Thread(target=run, daemon=True,
+                                        name="ckpt-async-writer")
+        self._thread.start()
+
+    def wait(self) -> Any:
+        """Block until the in-flight write (if any) commits; returns its
+        result and re-raises its exception."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+        result, self._result = self._result, None
+        return result

@@ -1,49 +1,80 @@
-"""Fault-tolerant checkpoint manager with optional SZp compression.
+"""Fault-tolerant checkpoint manager: v1 single-blob and v2 sharded layouts.
 
-Layout per checkpoint:  <dir>/step_<N>/
-    manifest.json   — tree structure, shapes, dtypes, per-blob sha256, mode
-    data.bin        — concatenated per-leaf blobs
+v1 layout (``save``/``restore``, kept for single-host exact restarts and
+backward compatibility):  <dir>/step_<N>/{manifest.json, data.bin}.
 
-Writes are atomic (tmp dir + os.replace) and verified by content hash on
-restore; a corrupt/partial checkpoint is skipped and the previous one is
-used — the restart path the training loop exercises (tests simulate a
-mid-run preemption).
+v2 layout (``CheckpointManager``): per-shard blobs + a v2 manifest (see
+``ckpt.manifest``) — each process serializes only its addressable shards,
+float32 leaves may ride the SZp/TopoSZp streams (``mode``), writes run on
+a background thread (``ckpt.async_writer``), and restore reassembles the
+shards onto ANY mesh shape (restore-with-resharding, the elastic restart
+path of ``train.loop``).
 
-Modes per-leaf:
-  * 'raw'  — exact bytes (default for ints / small tensors / exact restart)
-  * 'szp'  — error-bounded SZp stream for float arrays (space saver for
-             non-critical state; error bound recorded in the manifest)
+Both layouts write atomically: blobs + manifest land in ``step_N.tmp``
+(files fsync'd, then the tmp directory), ``os.replace`` publishes the
+directory, and the PARENT directory is fsync'd so the rename itself is
+durable across a crash.  Restore verifies per-blob content hashes; a
+corrupt/partial checkpoint is skipped WITH A LOGGED REASON and the
+previous one is used, while a structural (template/treedef) mismatch
+raises ``TreeMismatchError`` instead of silently training from scratch.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import json
 import os
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import manifest as mf
+from repro.ckpt import sharded
+from repro.ckpt.async_writer import AsyncWriter
+from repro.ckpt.manifest import TreeMismatchError
+from repro.ckpt.sharded import flatten_with_names as _flatten_with_names
 from repro.core import io as cio
 from repro.core.szp import szp_compress, szp_decompress
 
 _MANIFEST = "manifest.json"
 _DATA = "data.bin"
 
+Log = Optional[Callable[[str], None]]
 
-def _flatten_with_names(tree):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                      for p in path) for path, _ in flat]
-    leaves = [leaf for _, leaf in flat]
-    return names, leaves, treedef
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so its entries (a just-renamed checkpoint, new
+    blob files) survive a crash; no-op where dirs can't be opened."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _step_dirs(directory: str, reverse: bool = False) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    return sorted((int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp")),
+                  reverse=reverse)
+
+
+# --------------------------------------------------------------------------
+# v1: single data.bin per checkpoint (single-host)
+# --------------------------------------------------------------------------
 
 def save(tree, step: int, directory: str, compress: Optional[str] = None,
          eb: float = 1e-4) -> str:
-    """Write an atomic checkpoint; returns the final path."""
+    """Write an atomic v1 checkpoint; returns the final path."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -66,11 +97,14 @@ def save(tree, step: int, directory: str, compress: Optional[str] = None,
         else:
             blob = arr.tobytes()
         blobs.append(blob)
-        entries.append({
+        entry = {
             "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "mode": mode, "offset": offset, "nbytes": len(blob),
-            "sha256": hashlib.sha256(blob).hexdigest(), "eb": eb,
-        })
+            "sha256": hashlib.sha256(blob).hexdigest(),
+        }
+        if mode in mf.LOSSY_MODES:   # eb is meaningless on exact blobs
+            entry["eb"] = eb
+        entries.append(entry)
         offset += len(blob)
 
     with open(os.path.join(tmp, _DATA), "wb") as f:
@@ -82,9 +116,11 @@ def save(tree, step: int, directory: str, compress: Optional[str] = None,
         json.dump({"step": step, "entries": entries}, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(directory)   # make the rename itself durable
     return final
 
 
@@ -94,9 +130,25 @@ def _load_one(path: str, tree_template) -> Tuple[Any, int]:
     data = open(os.path.join(path, _DATA), "rb").read()
     names, leaves, treedef = _flatten_with_names(tree_template)
     by_name = {e["name"]: e for e in manifest["entries"]}
+    if sorted(by_name) != sorted(names):
+        missing = sorted(set(names) - set(by_name))
+        extra = sorted(set(by_name) - set(names))
+        raise TreeMismatchError(
+            f"checkpoint tree does not match restore template "
+            f"(missing from checkpoint: {missing[:4]}, "
+            f"unexpected in checkpoint: {extra[:4]})")
     out = []
     for name, leaf in zip(names, leaves):
         e = by_name[name]
+        tpl_dtype = getattr(leaf, "dtype", None)
+        if tpl_dtype is not None and str(tpl_dtype) != e["dtype"]:
+            raise IOError(f"dtype drift for {name}: checkpoint has "
+                          f"{e['dtype']}, template expects {tpl_dtype}")
+        tpl_shape = getattr(leaf, "shape", None)
+        if tpl_shape is not None and tuple(tpl_shape) != tuple(e["shape"]):
+            raise TreeMismatchError(
+                f"shape mismatch for {name}: checkpoint has {e['shape']}, "
+                f"template expects {tuple(tpl_shape)}")
         blob = data[e["offset"]: e["offset"] + e["nbytes"]]
         if hashlib.sha256(blob).hexdigest() != e["sha256"]:
             raise IOError(f"checkpoint blob hash mismatch for {name}")
@@ -113,34 +165,222 @@ def _load_one(path: str, tree_template) -> Tuple[Any, int]:
 
 
 def latest_step(directory: str) -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
+    steps = _step_dirs(directory)
     return steps[-1] if steps else None
 
 
-def restore(directory: str, tree_template) -> Optional[Tuple[Any, int]]:
-    """Load the newest valid checkpoint (falling back past corrupt ones)."""
-    if not os.path.isdir(directory):
-        return None
-    steps = sorted((int(d.split("_")[1]) for d in os.listdir(directory)
-                    if d.startswith("step_") and not d.endswith(".tmp")),
-                   reverse=True)
-    for s in steps:
+def restore(directory: str, tree_template,
+            log: Log = None) -> Optional[Tuple[Any, int]]:
+    """Load the newest valid v1 checkpoint (falling back past corrupt ones,
+    each skip logged with its reason; structural mismatches re-raise)."""
+    for s in _step_dirs(directory, reverse=True):
         path = os.path.join(directory, f"step_{s:08d}")
         try:
             return _load_one(path, tree_template)
-        except Exception:   # corrupt / partial: try the previous one
+        except TreeMismatchError:
+            raise                   # wrong template: never silently skip
+        except Exception as e:      # corrupt / partial: try the previous one
+            if log is not None:
+                log(f"[ckpt] skipping step {s}: "
+                    f"{type(e).__name__}: {e}")
             continue
     return None
 
 
 def prune(directory: str, keep: int = 3) -> None:
-    if not os.path.isdir(directory):
-        return
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
-    for s in steps[:-keep]:
+    for s in _step_dirs(directory)[:-keep]:
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)
+
+
+# --------------------------------------------------------------------------
+# v2: sharded + async + resharding-aware
+# --------------------------------------------------------------------------
+
+def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
+              mesh_shape: Optional[Dict[str, int]], mode: str, eb: float,
+              min_lossy: int, keep: Optional[int], log: Log) -> str:
+    """Serialize a snapshot to an atomic v2 checkpoint (background half)."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    fname = mf.blob_file(jax.process_index())
+    entries = []
+    offset = 0
+    with open(os.path.join(tmp, fname), "wb") as f:
+        for snap in snaps:
+            emode = sharded.leaf_mode(snap, mode, min_lossy)
+            shard_docs = []
+            for sh in snap.shards:
+                blob = sharded.encode_shard(sh.data, emode, eb)
+                f.write(blob)
+                shard_docs.append({
+                    "file": fname, "offset": offset, "nbytes": len(blob),
+                    "sha256": hashlib.sha256(blob).hexdigest(),
+                    "index": [[a, b] for a, b in sh.index],
+                })
+                offset += len(blob)
+            entries.append(mf.leaf_entry(snap.name, snap.shape, snap.dtype,
+                                         emode, eb, snap.spec, shard_docs))
+        f.flush()
+        os.fsync(f.fileno())
+
+    doc = mf.build(step, entries, mesh_shape, jax.process_count())
+    with open(os.path.join(tmp, mf.MANIFEST), "w") as f:
+        json.dump(doc, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _fsync_dir(directory)
+    if keep is not None:
+        prune(directory, keep)
+    if log is not None:
+        log(f"[ckpt] committed {final} ({offset} blob bytes, mode={mode})")
+    return final
+
+
+def _load_v2(path: str, template, mesh, verify: bool) -> Tuple[Any, int,
+                                                               Optional[dict]]:
+    doc = mf.load(path)
+    names, leaves, treedef = _flatten_with_names(template)
+    mf.check_tree(doc, names)
+    by_name = {e["name"]: e for e in doc["leaves"]}
+    files: Dict[str, bytes] = {}
+    out = []
+    for name, leaf in zip(names, leaves):
+        e = by_name[name]
+        tpl_dtype = getattr(leaf, "dtype", None)
+        if tpl_dtype is not None and str(tpl_dtype) != e["dtype"]:
+            raise IOError(f"dtype drift for {name}: checkpoint has "
+                          f"{e['dtype']}, template expects {tpl_dtype}")
+        tpl_shape = getattr(leaf, "shape", None)
+        if tpl_shape is not None and tuple(tpl_shape) != tuple(e["shape"]):
+            raise TreeMismatchError(
+                f"shape mismatch for {name}: checkpoint has {e['shape']}, "
+                f"template expects {tuple(tpl_shape)}")
+        blobs = []
+        for sh in e["shards"]:
+            if sh["file"] not in files:
+                files[sh["file"]] = open(os.path.join(path, sh["file"]),
+                                         "rb").read()
+            blob = files[sh["file"]][sh["offset"]: sh["offset"] + sh["nbytes"]]
+            if hashlib.sha256(blob).hexdigest() != sh["sha256"]:
+                raise IOError(f"blob hash mismatch for {name} "
+                              f"shard {sh['index']}")
+            blobs.append(blob)
+        full = sharded.assemble_leaf(e, blobs, verify=verify)
+        out.append(sharded.place_leaf(full, e, mesh))
+    return (jax.tree_util.tree_unflatten(treedef, out), doc["step"],
+            doc.get("mesh"))
+
+
+class RestoreResult(NamedTuple):
+    tree: Any
+    step: int
+    saved_mesh: Optional[Dict[str, int]]   # mesh the checkpoint was saved on
+
+
+class CheckpointManager:
+    """v2 checkpointing: sharded blobs, lossy leaf modes, async writes,
+    restore-with-resharding.
+
+    Args:
+      directory:  checkpoint root (one ``step_N`` dir per checkpoint).
+      mode:       'raw' | 'szp' | 'toposzp' leaf mode for large f32 leaves.
+      eb:         absolute error bound for the lossy modes.
+      async_write: serialize+fsync on a background thread; the step loop
+        only pays for the device->host snapshot (barrier if the previous
+        write is still in flight).
+      keep:       checkpoints retained after each save (None = all).
+      min_compress_size: f32 leaves/shards below this stay raw.
+      verify_restore: re-check hashes and the TopoSZp FP/FT guarantee.
+    """
+
+    def __init__(self, directory: str, mode: str = "raw", eb: float = 1e-4,
+                 async_write: bool = True, keep: Optional[int] = 3,
+                 min_compress_size: int = sharded.DEFAULT_MIN_LOSSY,
+                 verify_restore: bool = True, log: Log = print):
+        if mode not in mf.MODES:
+            raise ValueError(f"mode must be one of {mf.MODES}, got {mode!r}")
+        self.directory = directory
+        self.mode = mode
+        self.eb = float(eb)
+        self.async_write = async_write
+        self.keep = keep
+        self.min_compress_size = min_compress_size
+        self.verify_restore = verify_restore
+        self.log = log
+        self._writer = AsyncWriter()
+
+    @property
+    def in_flight(self) -> bool:
+        return self._writer.in_flight
+
+    def save(self, tree, step: int) -> Optional[str]:
+        """Checkpoint ``tree``.  Synchronous mode returns the committed
+        path; async mode snapshots device->host, hands the write to the
+        background thread and returns None (``wait()`` for the path)."""
+        if jax.process_count() > 1:
+            # The on-disk layout is per-process (blob_file(process_index))
+            # but the COMMIT is not yet coordinated: every process would
+            # race the same step_N.tmp and publish a manifest listing only
+            # its own shards — an unrestorable checkpoint.  Fail loudly
+            # until a barrier + process-0 manifest merge lands.
+            raise NotImplementedError(
+                "CheckpointManager.save is single-controller for now: "
+                "multi-process commit coordination (shared-dir barrier + "
+                "manifest merge on process 0) is not implemented")
+        snaps, mesh_shape, _ = sharded.snapshot_tree(tree)
+        fn = functools.partial(_write_v2, self.directory, step, snaps,
+                               mesh_shape, self.mode, self.eb,
+                               self.min_compress_size, self.keep, self.log)
+        if self.async_write:
+            self._writer.submit(fn)   # barriers on the previous write only
+            return None
+        return fn()
+
+    def wait(self) -> Optional[str]:
+        """Barrier: block until the in-flight write (if any) commits."""
+        return self._writer.wait()
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def peek_mesh(self) -> Optional[Dict[str, int]]:
+        """Mesh shape recorded by the newest readable manifest (or None)
+        — what the elastic restart path compares against the live mesh."""
+        for s in _step_dirs(self.directory, reverse=True):
+            try:
+                return mf.load(
+                    os.path.join(self.directory, f"step_{s:08d}")).get("mesh")
+            except Exception:
+                continue
+        return None
+
+    def restore(self, template, mesh=None) -> Optional[RestoreResult]:
+        """Load the newest valid checkpoint, reassembling shards and laying
+        leaves out on ``mesh`` (saved specs adapted to its shape).  Falls
+        back past corrupt/partial checkpoints with a logged reason;
+        re-raises structural template mismatches."""
+        self.wait()   # never read the directory under an in-flight write
+        for s in _step_dirs(self.directory, reverse=True):
+            path = os.path.join(self.directory, f"step_{s:08d}")
+            try:
+                tree, step, saved_mesh = _load_v2(path, template, mesh,
+                                                  self.verify_restore)
+                return RestoreResult(tree, step, saved_mesh)
+            except TreeMismatchError:
+                raise
+            except Exception as e:
+                if self.log is not None:
+                    self.log(f"[ckpt] skipping step {s}: "
+                             f"{type(e).__name__}: {e}")
+                continue
+        return None

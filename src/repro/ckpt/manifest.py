@@ -1,0 +1,99 @@
+"""Checkpoint manifest v2: the single JSON committing a sharded checkpoint.
+
+A v2 checkpoint directory holds one blob file per writing process plus the
+manifest, which is written LAST and acts as the commit marker (a directory
+without a readable manifest is an aborted write and is skipped on restore):
+
+    <dir>/step_<N>/
+        shards_p0000.bin   — concatenated per-shard blobs of process 0
+        shards_p0001.bin   — ... one per process ...
+        manifest.json      — v2 manifest (below), the commit record
+
+Manifest schema (``version: 2``)::
+
+    {"version": 2, "step": N,
+     "mesh": {"data": 4, "model": 2} | null,     # axis name -> size
+     "process_count": 1,
+     "leaves": [
+       {"name": "params/w", "shape": [256, 64], "dtype": "float32",
+        "mode": "raw" | "szp" | "toposzp",
+        "eb": 1e-4,                 # ONLY present for lossy modes
+        "spec": [["data"], null] | null,         # PartitionSpec per dim
+        "shards": [
+          {"file": "shards_p0000.bin", "offset": 0, "nbytes": 123,
+           "sha256": "...", "index": [[0, 64], [0, 64]]}]}]}
+
+``index`` is the half-open [start, stop) slice of the shard per dim, so a
+reader can reassemble the full leaf on ANY mesh (or none) — the basis of
+restore-with-resharding.  ``spec`` records the layout intent; restore
+re-targets it onto the current mesh via ``dist.sharding.adapt_spec``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+VERSION = 2
+MANIFEST = "manifest.json"
+LOSSY_MODES = ("szp", "toposzp")
+MODES = ("raw",) + LOSSY_MODES
+
+
+class TreeMismatchError(ValueError):
+    """Checkpoint tree structure does not match the restore template.
+
+    Unlike a corrupt blob (skipped with a logged reason, falling back to an
+    older checkpoint), a structural mismatch means the CALLER is restoring
+    the wrong thing — it propagates instead of silently returning None.
+    """
+
+
+def blob_file(process_index: int) -> str:
+    return f"shards_p{process_index:04d}.bin"
+
+
+def leaf_entry(name: str, shape, dtype: str, mode: str, eb: float,
+               spec: Optional[list], shards: List[Dict[str, Any]]
+               ) -> Dict[str, Any]:
+    if mode not in MODES:
+        raise ValueError(f"unknown checkpoint mode {mode!r}")
+    entry: Dict[str, Any] = {
+        "name": name, "shape": list(shape), "dtype": str(dtype),
+        "mode": mode, "spec": spec, "shards": shards,
+    }
+    if mode in LOSSY_MODES:        # eb is meaningless for exact blobs
+        entry["eb"] = eb
+    return entry
+
+
+def build(step: int, leaves: List[Dict[str, Any]],
+          mesh_shape: Optional[Dict[str, int]],
+          process_count: int = 1) -> Dict[str, Any]:
+    return {"version": VERSION, "step": int(step),
+            "mesh": mesh_shape, "process_count": int(process_count),
+            "leaves": leaves}
+
+
+def load(path: str) -> Dict[str, Any]:
+    """Read + validate a manifest; raises on missing/unreadable/wrong
+    version (the restore fallback treats that as an aborted write)."""
+    with open(os.path.join(path, MANIFEST)) as f:
+        doc = json.load(f)
+    if doc.get("version") != VERSION:
+        raise IOError(f"unsupported manifest version {doc.get('version')!r} "
+                      f"in {path}")
+    return doc
+
+
+def check_tree(doc: Dict[str, Any], template_names: List[str]) -> None:
+    """Template/treedef agreement: every template leaf must exist in the
+    manifest and vice versa — anything else is a structural mismatch."""
+    saved = [e["name"] for e in doc["leaves"]]
+    if sorted(saved) != sorted(template_names):
+        missing = sorted(set(template_names) - set(saved))
+        extra = sorted(set(saved) - set(template_names))
+        raise TreeMismatchError(
+            f"checkpoint tree does not match restore template "
+            f"(missing from checkpoint: {missing[:4]}, "
+            f"unexpected in checkpoint: {extra[:4]})")

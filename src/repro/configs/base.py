@@ -69,6 +69,12 @@ class ArchConfig:
     grad_wire_format: str = "int32"   # "int32" (code psum, accounting-only
                                       #   byte win) | "packed" (dist.ring
                                       #   bitpacked ppermute ring all-reduce)
+    # checkpointing (repro.ckpt v2: sharded blobs + async writer)
+    ckpt_mode: str = "raw"            # raw | szp | toposzp leaf mode for
+                                      #   large f32 (optimizer/master) leaves
+    ckpt_eb: float = 1e-4             # absolute error bound for lossy modes
+    ckpt_async: bool = True           # background serialize+fsync (the step
+                                      #   loop only pays the host snapshot)
     # costing mode (roofline): scans counted once by XLA cost analysis, so
     # the dry-run lowers small-depth UNROLLED variants and extrapolates.
     unroll_groups: bool = False

@@ -18,7 +18,21 @@ from repro.core.toposzp import TopoSZpCompressed
 
 MAGIC = b"SZPJ"
 MAGIC_TOPO = b"TSZP"
+STREAM_VERSION = 1
 _HDR = struct.Struct("<4sIIIIdI")  # magic, version, ny, nx, block, eb, nblocks
+
+
+class BadStreamError(ValueError):
+    """Raised when a serialized SZp/TopoSZp stream is malformed (bad magic,
+    unsupported version, truncated sections).  The checkpoint restore path
+    treats it as a corrupt blob and falls back to an older checkpoint."""
+
+
+def peek_magic(buf: bytes) -> bytes:
+    """Magic of a serialized stream without parsing it (b'SZPJ'/b'TSZP')."""
+    if len(buf) < 4:
+        raise BadStreamError(f"stream too short ({len(buf)} bytes)")
+    return bytes(buf[:4])
 
 
 def _np(a) -> np.ndarray:
@@ -42,8 +56,13 @@ def serialize_szp(parts: SZpParts, shape: Tuple[int, int], eb: float,
 
 
 def deserialize_szp(buf: bytes) -> Tuple[SZpParts, Tuple[int, int], float, int]:
-    magic, _ver, ny, nx, block, eb, nblocks = _HDR.unpack_from(buf, 0)
-    assert magic in (MAGIC, MAGIC_TOPO), f"bad magic {magic!r}"
+    if len(buf) < _HDR.size:
+        raise BadStreamError(f"stream too short ({len(buf)} bytes)")
+    magic, ver, ny, nx, block, eb, nblocks = _HDR.unpack_from(buf, 0)
+    if magic not in (MAGIC, MAGIC_TOPO):
+        raise BadStreamError(f"bad magic {magic!r}")
+    if ver != STREAM_VERSION:
+        raise BadStreamError(f"unsupported stream version {ver}")
     off = _HDR.size
     n_const = -(-nblocks // 8)
     n_sign = -(-(nblocks * block) // 8)
@@ -88,7 +107,11 @@ def serialize_toposzp(comp: TopoSZpCompressed, shape: Tuple[int, int],
 
 
 def deserialize_toposzp(buf: bytes):
+    if len(buf) < 16:
+        raise BadStreamError(f"stream too short ({len(buf)} bytes)")
     n_base, n_labels, n_ranks, n_cp = struct.unpack_from("<IIII", buf, 0)
+    if 16 + n_base + n_labels + n_ranks > len(buf):
+        raise BadStreamError("truncated TopoSZp stream")
     off = 16
     szp_parts, shape, eb, block = deserialize_szp(buf[off:off + n_base])
     off += n_base

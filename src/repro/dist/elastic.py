@@ -10,11 +10,17 @@ idle 3 devices while (7, 1) uses all 7 — so (7, 1) wins.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
 from jax.sharding import Mesh
+
+
+def mesh_shape_dict(mesh) -> Dict[str, int]:
+    """``{axis_name: size}`` for a mesh — the form the v2 checkpoint
+    manifest records and the elastic restart path compares."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
 def largest_mesh_shape(n_devices: int, model_parallel: int

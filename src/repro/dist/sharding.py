@@ -94,6 +94,57 @@ def data_sharding(batch: Any, mesh, strategy: str = "tp") -> Any:
 
 
 # --------------------------------------------------------------------------
+# PartitionSpec (de)serialization + cross-mesh adaptation (ckpt restore)
+# --------------------------------------------------------------------------
+
+def spec_to_json(spec) -> list:
+    """JSON-able form of a PartitionSpec: one entry per dim, each ``None``
+    or a list of mesh axis names (a single axis is stored as a 1-list)."""
+    out = []
+    for dim in tuple(spec):
+        if dim is None:
+            out.append(None)
+        elif isinstance(dim, (tuple, list)):
+            out.append([str(a) for a in dim])
+        else:
+            out.append([str(dim)])
+    return out
+
+
+def spec_from_json(doc) -> P:
+    """Invert :func:`spec_to_json`."""
+    dims = []
+    for dim in doc or []:
+        if dim is None:
+            dims.append(None)
+        elif len(dim) == 1:
+            dims.append(dim[0])
+        else:
+            dims.append(tuple(dim))
+    return P(*dims)
+
+
+def adapt_spec(spec, mesh, shape: Sequence[int]) -> P:
+    """Re-target a saved PartitionSpec onto a (possibly different) mesh.
+
+    Restoring a checkpoint written on another mesh shape keeps the saved
+    layout intent but must stay legal: axes the new mesh does not have are
+    dropped, and an axis group whose total size no longer divides the dim
+    is dropped too (same divisibility-guard policy as the sharding rules).
+    """
+    dims = []
+    for i, dim in enumerate(tuple(spec)[: len(shape)]):
+        axes = () if dim is None else (
+            tuple(dim) if isinstance(dim, (tuple, list)) else (dim,))
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if axes and shape[i] % _axes_size(mesh, axes) == 0:
+            dims.append(axes if len(axes) > 1 else axes[0])
+        else:
+            dims.append(None)
+    return P(*dims)
+
+
+# --------------------------------------------------------------------------
 # Parameters
 # --------------------------------------------------------------------------
 

@@ -13,6 +13,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro.ckpt import CheckpointManager
 from repro.data import token_batches
 from repro.dist.compat import HAS_PARTIAL_AUTO
 from repro.launch.mesh import make_test_mesh
@@ -32,6 +33,18 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-mode", choices=["raw", "szp", "toposzp"],
+                    default=None,
+                    help="v2 leaf mode for large f32 leaves: raw bytes, "
+                         "error-bounded SZp, or TopoSZp (critical points "
+                         "and rank order exact under a 2*eb bound); unset "
+                         "defers to cfg.ckpt_mode")
+    ap.add_argument("--ckpt-eb", type=float, default=None,
+                    help="absolute error bound for lossy checkpoint modes; "
+                         "unset defers to cfg.ckpt_eb")
+    ap.add_argument("--ckpt-sync", action="store_true",
+                    help="serialize+fsync on the step loop thread instead "
+                         "of the async background writer")
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--rel-eb", type=float, default=1e-4)
     ap.add_argument("--topo-frac", type=float, default=None,
@@ -77,11 +90,24 @@ def main():
                                start_step=int(state.step)):
             yield {k: jnp.asarray(v) for k, v in b.items()}
 
+    manager = None
+    if args.ckpt_dir is not None:
+        manager = CheckpointManager(
+            args.ckpt_dir,
+            mode=args.ckpt_mode if args.ckpt_mode is not None
+            else cfg.ckpt_mode,
+            eb=args.ckpt_eb if args.ckpt_eb is not None else cfg.ckpt_eb,
+            async_write=cfg.ckpt_async and not args.ckpt_sync)
+
     ctx = mesh if mesh is not None else _nullcontext()
     with ctx:
         state, report = train_loop(
             state, step_fn, batches(), num_steps=args.steps,
-            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+            ckpt_manager=manager, ckpt_every=args.ckpt_every,
+            mesh=mesh, model_parallel=args.model_parallel)
+    if report.resharded:
+        print(f"[train] elastic restore: checkpoint mesh "
+              f"{report.saved_mesh} resharded onto {report.restore_mesh}")
     print(f"[train] done: loss {report.losses[0]:.4f} -> "
           f"{report.losses[-1]:.4f} over {report.steps_run} steps; "
           f"stragglers={len(report.straggler_events)}")

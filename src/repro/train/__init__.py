@@ -1,6 +1,6 @@
-from repro.train.state import TrainState, init_state
+from repro.train.state import TrainState, init_state, shard_state
 from repro.train.step import make_train_step, make_loss_fn
 from repro.train.loop import train_loop, LoopReport, PreemptionError
 
-__all__ = ["TrainState", "init_state", "make_train_step", "make_loss_fn",
-           "train_loop", "LoopReport", "PreemptionError"]
+__all__ = ["TrainState", "init_state", "shard_state", "make_train_step",
+           "make_loss_fn", "train_loop", "LoopReport", "PreemptionError"]

@@ -2,22 +2,26 @@
 preemption simulation hooks.
 
 Designed for 1000+-node operation:
-  * checkpoint every N steps through ckpt.manager (atomic + hashed), restore
-    on start — a preempted/crashed job resumes exactly;
+  * checkpoint every N steps — either through the legacy v1 module API
+    (``ckpt_dir``) or through a v2 ``ckpt.CheckpointManager``
+    (``ckpt_manager``: sharded blobs, szp/toposzp leaf compression, async
+    background writes) — restore on start so a preempted job resumes;
+  * elasticity: when the checkpoint was written on a different mesh shape
+    than the current world (device loss / regrowth), the loop rebuilds the
+    largest valid mesh from the surviving devices via
+    ``dist.elastic.rebuild_mesh`` and the manager reassembles + reshards
+    every leaf onto it (saved PartitionSpecs adapted to the new mesh);
   * straggler mitigation: per-step wall time tracked with an EWMA; a step
     slower than ``straggler_z`` sigmas triggers the mitigation hook (on a
-    real cluster: reshard/evict; here: recorded event + callback);
-  * elasticity: on a world-size change the loop rebuilds the data iterator
-    sharding through dist.elastic (device loss handled between steps).
+    real cluster: reshard/evict; here: recorded event + callback).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt import manager as ckpt
 from repro.train.state import TrainState
@@ -31,10 +35,46 @@ class LoopReport:
     straggler_events: List[int] = field(default_factory=list)
     restored_from: Optional[int] = None
     checkpoints: List[int] = field(default_factory=list)
+    resharded: bool = False                      # elastic restore happened
+    restore_mesh: Optional[Dict[str, int]] = None  # mesh restored onto
+    saved_mesh: Optional[Dict[str, int]] = None    # mesh the ckpt was on
 
 
 class PreemptionError(RuntimeError):
     """Raised by the preemption simulator to model a node loss."""
+
+
+def _elastic_restore(manager, state, mesh, model_parallel, devices, report,
+                     log):
+    """Restore through the v2 manager, rebuilding the mesh on a world-size
+    change (the dist.elastic wiring of the ROADMAP's elastic item)."""
+    from repro.dist.elastic import mesh_shape_dict, rebuild_mesh
+
+    saved = manager.peek_mesh()
+    restore_mesh = mesh
+    if saved is not None:
+        cur = mesh_shape_dict(mesh) if mesh is not None else None
+        if cur != saved:
+            # World-size change (or the caller didn't rebuild a mesh):
+            # re-lay the checkpoint out on the largest valid mesh the
+            # surviving devices support.
+            if restore_mesh is None:
+                devs = devices if devices is not None else jax.devices()
+                restore_mesh = rebuild_mesh(devs, model_parallel)
+            report.resharded = True
+            report.restore_mesh = mesh_shape_dict(restore_mesh)
+            log(f"[loop] mesh changed {saved} -> {report.restore_mesh}; "
+                f"resharding the restored state")
+    res = manager.restore(state, mesh=restore_mesh)
+    if res is None:
+        report.resharded = False
+        report.restore_mesh = None
+        return state
+    report.restored_from = res.step
+    report.saved_mesh = res.saved_mesh
+    log(f"[loop] restored checkpoint at step {res.step}"
+        + (" (resharded)" if report.resharded else ""))
+    return res.tree
 
 
 def train_loop(state: TrainState, step_fn: Callable, data_iter,
@@ -44,12 +84,25 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
                straggler_hook: Optional[Callable[[int, float], None]] = None,
                preempt_at: Optional[int] = None,
                ckpt_compress: Optional[str] = None,
-               log: Callable[[str], None] = print) -> (TrainState, LoopReport):
-    """Run ``num_steps`` with full fault-tolerance plumbing."""
+               ckpt_manager: Optional[ckpt.CheckpointManager] = None,
+               mesh=None, model_parallel: int = 1, devices=None,
+               log: Callable[[str], None] = print
+               ) -> Tuple[TrainState, LoopReport]:
+    """Run ``num_steps`` with full fault-tolerance plumbing.
+
+    ``ckpt_manager`` (v2) supersedes ``ckpt_dir`` (v1) when both are
+    given.  ``mesh``/``model_parallel``/``devices`` feed the elastic
+    restore: a checkpoint saved on a different mesh shape is resharded
+    onto ``mesh`` or, when no mesh is passed, onto
+    ``dist.elastic.rebuild_mesh(devices or jax.devices(), model_parallel)``.
+    """
     report = LoopReport()
 
-    if ckpt_dir is not None:
-        restored = ckpt.restore(ckpt_dir, state)
+    if ckpt_manager is not None:
+        state = _elastic_restore(ckpt_manager, state, mesh, model_parallel,
+                                 devices, report, log)
+    elif ckpt_dir is not None:
+        restored = ckpt.restore(ckpt_dir, state, log=log)
         if restored is not None:
             state, at = restored
             report.restored_from = at
@@ -89,10 +142,21 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
         if i % log_every == 0:
             log(f"[loop] step {i} loss {loss:.4f} ({dt * 1e3:.1f} ms)")
 
-        if ckpt_dir is not None and (i + 1) % ckpt_every == 0:
-            path = ckpt.save(state, i + 1, ckpt_dir, compress=ckpt_compress)
-            ckpt.prune(ckpt_dir)
-            report.checkpoints.append(i + 1)
-            log(f"[loop] checkpoint -> {path}")
+        if (i + 1) % ckpt_every == 0:
+            if ckpt_manager is not None:
+                # async mode: pays only the device->host snapshot here
+                # (plus a barrier iff the previous write is in flight).
+                ckpt_manager.save(state, i + 1)
+                report.checkpoints.append(i + 1)
+                log(f"[loop] checkpoint @ step {i + 1} "
+                    f"({'async' if ckpt_manager.async_write else 'sync'})")
+            elif ckpt_dir is not None:
+                path = ckpt.save(state, i + 1, ckpt_dir,
+                                 compress=ckpt_compress)
+                ckpt.prune(ckpt_dir)
+                report.checkpoints.append(i + 1)
+                log(f"[loop] checkpoint -> {path}")
 
+    if ckpt_manager is not None:
+        ckpt_manager.wait()   # commit the trailing async write before exit
     return state, report

@@ -1,7 +1,7 @@
 """Training state container."""
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -21,3 +21,34 @@ def init_state(params, optimizer, grad_compress: bool) -> TrainState:
            if grad_compress else None)
     return TrainState(jnp.zeros((), jnp.int32), params,
                       optimizer.init(params), err)
+
+
+def shard_state(state: TrainState, cfg, mesh) -> TrainState:
+    """Lay a TrainState out on ``mesh`` with the model's sharding rules.
+
+    Params, fp32 master copies, both Adam moments and the error-feedback
+    tree all follow ``dist.sharding.param_shardings`` (they are
+    param-shaped); scalars replicate.  This is the optimizer-state
+    resharding half of the elastic restart path: after
+    ``dist.elastic.rebuild_mesh`` shrinks the mesh, the restored state is
+    pushed through here (or through the checkpoint manifest's saved
+    specs) to land on the surviving devices.
+    """
+    from repro.dist.sharding import param_shardings, replicated
+
+    p_sh = param_shardings(jax.eval_shape(lambda: state.params), cfg, mesh)
+    rep = replicated(jnp.zeros(()), mesh)
+
+    def put(tree, shardings):
+        if tree is None:
+            return None
+        return jax.tree.map(jax.device_put, tree, shardings)
+
+    opt = state.opt_state._replace(
+        step=jax.device_put(state.opt_state.step, rep),
+        master=put(state.opt_state.master, p_sh),
+        m=put(state.opt_state.m, p_sh),
+        v=put(state.opt_state.v, p_sh))
+    return TrainState(jax.device_put(state.step, rep),
+                      put(state.params, p_sh), opt,
+                      put(state.err, p_sh))

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.collectives import (WIRE_FORMATS, compressed_psum_tree,
