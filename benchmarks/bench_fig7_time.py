@@ -4,43 +4,159 @@ TopoSZp vs the TopoIter baseline (the TopoSZ/TopoA stand-in: iterative
 global correction with persistence-style passes).  The paper reports
 100x-10000x compression and 10x-500x decompression speedups for TopoSZp;
 the derived column carries the measured speedup factors.
+
+Beyond the paper figure, this is the CORE-COMPRESSOR regression bench
+(benchmarks/baseline_core.json gates it in CI like gradcomp/ckpt):
+
+  * per-stage timings of the production pipeline (detect = CD, quant =
+    fused QZ+LZ + rank metadata, pack = tiled BE, restore = CP^+RP^+RS^),
+  * the BE-stage peak buffer (tiled static bucket vs the legacy 32-bit
+    worst case — the >= 4x capacity contract at eb=1e-3) and the
+    tiled-vs-worstcase pack time,
+  * the batched multi-field API vs a per-field loop.
+
+``--json PATH`` writes the machine-readable results file the CI
+regression gate (benchmarks/check_regression.py) consumes; ``--smoke``
+shrinks the field count / TopoIter passes for CI wall-clock.
 """
 from __future__ import annotations
 
+import argparse
+
 import jax.numpy as jnp
 
-from benchmarks.common import bench_grid, emit, timeit
+from benchmarks.common import bench_grid, emit, reset_records, timeit, \
+    write_json
+from repro.core import bitpack
 from repro.core.baselines import (topo_iter_compress, topo_iter_decompress)
-from repro.core.toposzp import toposzp_compress, toposzp_decompress
+from repro.core.szp import DEFAULT_BLOCK
+from repro.core.toposzp import (_measure_one, _pack_streams,
+                                toposzp_compress, toposzp_compress_batch,
+                                toposzp_decompress,
+                                toposzp_decompress_batch)
 from repro.data.fields import gaussian_random_field, vortex_field
+from repro.kernels import ops
 
 EB = 1e-3
 FIELDS = ["AEROD", "CLDHGH", "CLDLOW", "FLDSC", "CLDMED"]   # ATM fields
 
 
-def run():
-    ny, nx = bench_grid("CLIMATE")
-    for i, field_name in enumerate(FIELDS):
-        gen = gaussian_random_field if i % 2 == 0 else vortex_field
-        f = jnp.asarray(gen(ny, nx, seed=10 + i))
+def _stage_records(f: jnp.ndarray, backend: str) -> None:
+    """Per-stage timings + BE buffer accounting on one CLIMATE field."""
+    ny, nx = f.shape
+    block = DEFAULT_BLOCK
+    detect = timeit(lambda: ops.cp_detect(f, backend=backend))
+    quant = timeit(lambda: _measure_one(f, EB, block=block, backend=backend))
+    measured = _measure_one(f, EB, block=block, backend=backend)
+    main, rank, labels2b, n_cp, w_max, rw_max = measured
+    mw_main = bitpack.width_bucket(int(w_max))
+    mw_rank = bitpack.width_bucket(int(rw_max))
+    pack = timeit(lambda: _pack_streams(main, rank, labels2b, n_cp,
+                                        block=block, mw_main=mw_main,
+                                        mw_rank=mw_rank, backend=backend))
+    # legacy one-shot pack at the 32-bit worst-case capacity (what the
+    # pre-tiled pipeline ran for the SAME stream content)
+    mags, widths = main[1], main[3]
+    pack_worst = timeit(lambda: bitpack.pack_blocks(mags, widths))
+    pack_tiled = timeit(
+        lambda: bitpack.pack_blocks_tiled(mags, widths, max_width=mw_main))
 
+    comp = _pack_streams(main, rank, labels2b, n_cp, block=block,
+                         mw_main=mw_main, mw_rank=mw_rank, backend=backend)
+    restore = timeit(lambda: toposzp_decompress(comp, (ny, nx), EB,
+                                                backend=backend))
+    nblocks = int(widths.shape[0])
+    cap_worst = nblocks * (((block - 1) * 32 + 7) // 8)
+    cap_tiled = int(comp.szp.payload.shape[0])
+    emit("fig7/core/stage_detect", detect * 1e6, {"backend": backend})
+    emit("fig7/core/stage_quant", quant * 1e6,
+         {"backend": backend, "includes": "cd+rp+qz+lz+widths"})
+    emit("fig7/core/stage_pack", pack * 1e6, {
+        "backend": backend,
+        "width_bucket": mw_main,
+        "tiled_vs_worstcase_time": pack_tiled / pack_worst,
+    })
+    emit("fig7/core/stage_restore", restore * 1e6, {"backend": backend})
+    emit("fig7/core/be_capacity", 0.0, {
+        "eb": EB, "grid": f"{ny}x{nx}",
+        "cap_worstcase_bytes": cap_worst,
+        "cap_tiled_bytes": cap_tiled,
+        "capacity_reduction": cap_worst / cap_tiled,
+        "payload_valid_bytes": int(comp.szp.payload_nbytes),
+    })
+
+
+def run(smoke: bool = False):
+    ny, nx = bench_grid("CLIMATE")
+    backend = ops.resolve_backend(None)
+    names = FIELDS[:2] if smoke else FIELDS
+    iters = 2 if smoke else 6
+    fields = []
+    for i, field_name in enumerate(names):
+        gen = gaussian_random_field if i % 2 == 0 else vortex_field
+        fields.append(jnp.asarray(gen(ny, nx, seed=10 + i)))
+
+    _stage_records(fields[0], backend)
+
+    for f, field_name in zip(fields, names):
         comp = toposzp_compress(f, EB)
         t_fast_c = timeit(lambda: toposzp_compress(f, EB))
         t_fast_d = timeit(lambda: toposzp_decompress(comp, (ny, nx), EB))
 
-        t_slow_c = timeit(lambda: topo_iter_compress(f, EB, max_iters=6),
+        t_slow_c = timeit(lambda: topo_iter_compress(f, EB, max_iters=iters),
                           warmup=0, iters=1)
-        slow_comp = topo_iter_compress(f, EB, max_iters=6)
+        slow_comp = topo_iter_compress(f, EB, max_iters=iters)
         t_slow_d = timeit(lambda: topo_iter_decompress(slow_comp, (ny, nx),
                                                        EB), warmup=0, iters=1)
 
-        emit(f"fig7/{field_name}/toposzp_compress", t_fast_c * 1e6,
-             f"speedup_vs_topoiter={t_slow_c / t_fast_c:.0f}x")
+        emit(f"fig7/{field_name}/toposzp_compress", t_fast_c * 1e6, {
+            "speedup_vs_topoiter": t_slow_c / t_fast_c,
+            "nbytes": int(comp.nbytes),
+        })
         emit(f"fig7/{field_name}/toposzp_decompress", t_fast_d * 1e6,
-             f"speedup_vs_topoiter={t_slow_d / t_fast_d:.0f}x")
+             {"speedup_vs_topoiter": t_slow_d / t_fast_d})
         emit(f"fig7/{field_name}/topoiter_compress", t_slow_c * 1e6, "")
         emit(f"fig7/{field_name}/topoiter_decompress", t_slow_d * 1e6, "")
 
+    # batched multi-field API vs a per-field loop (same streams); the two
+    # sides are timed INTERLEAVED so CPU frequency drift hits both equally
+    stack = jnp.stack(fields)
+    loop_fn = lambda: [toposzp_compress(f, EB) for f in fields]  # noqa: E731
+    batch_fn = lambda: toposzp_compress_batch(stack, EB)         # noqa: E731
+    loop_fn(), batch_fn()                                        # warm both
+    t_loop_c = t_batch_c = None
+    for _ in range(3):
+        tl = timeit(loop_fn, warmup=0, iters=1)
+        tb = timeit(batch_fn, warmup=0, iters=1)
+        t_loop_c = tl if t_loop_c is None else min(t_loop_c, tl)
+        t_batch_c = tb if t_batch_c is None else min(t_batch_c, tb)
+    bcomp = toposzp_compress_batch(stack, EB)
+    t_batch_d = timeit(
+        lambda: toposzp_decompress_batch(bcomp, (ny, nx), EB))
+    emit("fig7/core/compress_batch", t_batch_c * 1e6, {
+        "fields": len(fields),
+        "batch_vs_loop": t_batch_c / t_loop_c,
+        "us_per_field": t_batch_c * 1e6 / len(fields),
+    })
+    emit("fig7/core/decompress_batch", t_batch_d * 1e6, {
+        "fields": len(fields),
+        "us_per_field": t_batch_d * 1e6 / len(fields),
+    })
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None,
+                    help="write machine-readable results to this path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer fields / TopoIter passes for CI wall-clock")
+    args = ap.parse_args()
+    reset_records()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+    if args.json:
+        write_json(args.json, bench="bench_fig7_time", smoke=args.smoke)
+
 
 if __name__ == "__main__":
-    run()
+    main()

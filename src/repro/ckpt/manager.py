@@ -199,7 +199,8 @@ def prune(directory: str, keep: int = 3) -> None:
 
 def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
               mesh_shape: Optional[Dict[str, int]], mode: str, eb: float,
-              min_lossy: int, keep: Optional[int], log: Log) -> str:
+              min_lossy: int, keep: Optional[int], log: Log,
+              backend: Optional[str] = None) -> str:
     """Serialize a snapshot to an atomic v2 checkpoint (background half)."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
@@ -215,8 +216,9 @@ def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
         for snap in snaps:
             emode = sharded.leaf_mode(snap, mode, min_lossy)
             shard_docs = []
-            for sh in snap.shards:
-                blob = sharded.encode_shard(sh.data, emode, eb)
+            blobs = sharded.encode_shards([sh.data for sh in snap.shards],
+                                          emode, eb, backend=backend)
+            for sh, blob in zip(snap.shards, blobs):
                 f.write(blob)
                 shard_docs.append({
                     "file": fname, "offset": offset, "nbytes": len(blob),
@@ -246,8 +248,9 @@ def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
     return final
 
 
-def _load_v2(path: str, template, mesh, verify: bool) -> Tuple[Any, int,
-                                                               Optional[dict]]:
+def _load_v2(path: str, template, mesh, verify: bool,
+             backend: Optional[str] = None) -> Tuple[Any, int,
+                                                     Optional[dict]]:
     doc = mf.load(path)
     names, leaves, treedef = _flatten_with_names(template)
     mf.check_tree(doc, names)
@@ -275,7 +278,8 @@ def _load_v2(path: str, template, mesh, verify: bool) -> Tuple[Any, int,
                 raise IOError(f"blob hash mismatch for {name} "
                               f"shard {sh['index']}")
             blobs.append(blob)
-        full = sharded.assemble_leaf(e, blobs, verify=verify)
+        full = sharded.assemble_leaf(e, blobs, verify=verify,
+                                     backend=backend)
         out.append(sharded.place_leaf(full, e, mesh))
     return (jax.tree_util.tree_unflatten(treedef, out), doc["step"],
             doc.get("mesh"))
@@ -306,7 +310,8 @@ class CheckpointManager:
     def __init__(self, directory: str, mode: str = "raw", eb: float = 1e-4,
                  async_write: bool = True, keep: Optional[int] = 3,
                  min_compress_size: int = sharded.DEFAULT_MIN_LOSSY,
-                 verify_restore: bool = True, log: Log = print):
+                 verify_restore: bool = True, log: Log = print,
+                 kernel_backend: Optional[str] = None):
         if mode not in mf.MODES:
             raise ValueError(f"mode must be one of {mf.MODES}, got {mode!r}")
         self.directory = directory
@@ -317,6 +322,9 @@ class CheckpointManager:
         self.min_compress_size = min_compress_size
         self.verify_restore = verify_restore
         self.log = log
+        # TopoSZp/SZp kernel dispatch for blob encode/decode (None/"auto"
+        # resolves to the hardware default, see kernels.ops.resolve_backend)
+        self.kernel_backend = kernel_backend
         self._writer = AsyncWriter()
 
     @property
@@ -340,7 +348,8 @@ class CheckpointManager:
         snaps, mesh_shape, _ = sharded.snapshot_tree(tree)
         fn = functools.partial(_write_v2, self.directory, step, snaps,
                                mesh_shape, self.mode, self.eb,
-                               self.min_compress_size, self.keep, self.log)
+                               self.min_compress_size, self.keep, self.log,
+                               backend=self.kernel_backend)
         if self.async_write:
             self._writer.submit(fn)   # barriers on the previous write only
             return None
@@ -374,7 +383,8 @@ class CheckpointManager:
             path = os.path.join(self.directory, f"step_{s:08d}")
             try:
                 tree, step, saved_mesh = _load_v2(path, template, mesh,
-                                                  self.verify_restore)
+                                                  self.verify_restore,
+                                                  backend=self.kernel_backend)
                 return RestoreResult(tree, step, saved_mesh)
             except TreeMismatchError:
                 raise

@@ -34,8 +34,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.ckpt import manifest as mf
 from repro.core import bitpack, guarantees
 from repro.core import io as cio
-from repro.core.szp import szp_compress, szp_decompress
-from repro.core.toposzp import toposzp_compress, toposzp_decompress
+from repro.core.szp import (SZpParts, szp_compress, szp_compress_batch,
+                            szp_decompress, szp_decompress_batch)
+from repro.core.toposzp import (TopoSZpCompressed, batch_slice,
+                                toposzp_compress, toposzp_compress_batch,
+                                toposzp_decompress, toposzp_decompress_batch)
 from repro.dist.elastic import mesh_shape_dict
 from repro.dist.sharding import adapt_spec, spec_from_json, spec_to_json
 
@@ -125,56 +128,163 @@ def leaf_mode(snap: LeafSnap, mode: str,
     return "raw"
 
 
-def encode_shard(data: np.ndarray, mode: str, eb: float) -> bytes:
+def encode_shard(data: np.ndarray, mode: str, eb: float,
+                 backend: Optional[str] = None) -> bytes:
     if mode == "raw":
         return data.tobytes()
     f2d = jnp.asarray(data.astype(np.float32).reshape(_field2d(data.shape)))
     if mode == "szp":
-        return cio.serialize_szp(szp_compress(f2d, eb), f2d.shape, eb)
+        return cio.serialize_szp(szp_compress(f2d, eb, backend=backend),
+                                 f2d.shape, eb)
     if mode == "toposzp":
-        return cio.serialize_toposzp(toposzp_compress(f2d, eb),
-                                     f2d.shape, eb)
+        return cio.serialize_toposzp(
+            toposzp_compress(f2d, eb, backend=backend), f2d.shape, eb)
+    raise ValueError(f"unknown checkpoint mode {mode!r}")
+
+
+def encode_shards(datas: List[np.ndarray], mode: str, eb: float,
+                  backend: Optional[str] = None) -> List[bytes]:
+    """Encode all shards of one leaf; same-shape lossy shards are stacked
+    through the batched compressors (one compiled call for the whole
+    leaf instead of one dispatch per shard).  Byte-identical to
+    per-shard :func:`encode_shard` calls."""
+    shapes = {d.shape for d in datas}
+    if mode == "raw" or len(datas) < 2 or len(shapes) != 1:
+        return [encode_shard(d, mode, eb, backend=backend) for d in datas]
+    f2d = _field2d(datas[0].shape)
+    stack = jnp.asarray(np.stack([d.astype(np.float32).reshape(f2d)
+                                  for d in datas]))
+    if mode == "szp":
+        parts = szp_compress_batch(stack, eb, backend=backend)
+        return [cio.serialize_szp(
+            jax.tree_util.tree_map(lambda a: a[i], parts), f2d, eb)
+            for i in range(len(datas))]
+    if mode == "toposzp":
+        comp = toposzp_compress_batch(stack, eb, backend=backend)
+        return [cio.serialize_toposzp(batch_slice(comp, i), f2d, eb)
+                for i in range(len(datas))]
     raise ValueError(f"unknown checkpoint mode {mode!r}")
 
 
 def decode_shard(blob: bytes, mode: str, dtype: np.dtype,
-                 shard_shape: Tuple[int, ...], verify: bool = True
-                 ) -> np.ndarray:
+                 shard_shape: Tuple[int, ...], verify: bool = True,
+                 backend: Optional[str] = None) -> np.ndarray:
     if mode == "raw":
         return np.frombuffer(blob, dtype=dtype).reshape(shard_shape).copy()
     if mode == "szp":
         if cio.peek_magic(blob) != cio.MAGIC:
             raise cio.BadStreamError("szp-mode blob has wrong stream magic")
         parts, shape2d, eb, block = cio.deserialize_szp(blob)
-        out = szp_decompress(parts, tuple(shape2d), eb, block=block)
+        out = szp_decompress(parts, tuple(shape2d), eb, block=block,
+                             backend=backend)
         return np.asarray(out).reshape(shard_shape).astype(dtype, copy=False)
     if mode == "toposzp":
         if cio.peek_magic(blob[16:20]) != cio.MAGIC_TOPO:
             raise cio.BadStreamError("toposzp-mode blob has wrong magic")
         comp, shape2d, eb, block = cio.deserialize_toposzp(blob)
-        out = toposzp_decompress(comp, tuple(shape2d), eb, block=block)
-        if verify:
-            # re-verify the topology guarantee against the stored label
-            # map: any FP/FT here means a corrupt or forged stream.
-            n = int(shape2d[0]) * int(shape2d[1])
-            labels = bitpack.unpack_2bit(comp.labels2b, n).reshape(shape2d)
-            if bool(guarantees.violations(out, labels).any()):
-                raise IOError("toposzp blob failed the FP/FT guarantee "
-                              "re-verification on restore")
+        out = toposzp_decompress(comp, tuple(shape2d), eb, block=block,
+                                 backend=backend)
+        _verify_topo(out, comp, shape2d, verify)
         return np.asarray(out).reshape(shard_shape).astype(dtype, copy=False)
     raise ValueError(f"unknown checkpoint mode {mode!r}")
 
 
+def _verify_topo(out, comp, shape2d, verify: bool) -> None:
+    """Re-verify the topology guarantee against the stored label map: any
+    FP/FT here means a corrupt or forged stream."""
+    if not verify:
+        return
+    n = int(shape2d[0]) * int(shape2d[1])
+    labels = bitpack.unpack_2bit(comp.labels2b, n).reshape(shape2d)
+    if bool(guarantees.violations(out, labels).any()):
+        raise IOError("toposzp blob failed the FP/FT guarantee "
+                      "re-verification on restore")
+
+
+def _stack_szp(parsed: List[SZpParts], block: int) -> SZpParts:
+    """Stack per-stream SZpParts on a batch axis; payload buffers are
+    zero-padded to the widest capacity (harmless: unpack masks every
+    magnitude to its block width) and trimmed rank streams to the largest
+    block count (zero-width/zero-first padding blocks decode to exactly
+    the zeros the CP-first layout guarantees past n_cp)."""
+    nb_max = max(int(p.widths.shape[0]) for p in parsed)
+    cap = max(int(p.payload.shape[0]) for p in parsed)
+
+    def pad(a, n):
+        a = np.asarray(a)
+        return np.pad(a, (0, n - a.shape[0]))
+    return SZpParts(
+        jnp.asarray(np.stack([pad(p.const_bits, -(-nb_max // 8))
+                              for p in parsed])),
+        jnp.asarray(np.stack([pad(p.widths, nb_max) for p in parsed])),
+        jnp.asarray(np.stack([pad(p.signs, -(-nb_max * block // 8))
+                              for p in parsed])),
+        jnp.asarray(np.stack([pad(p.first, nb_max) for p in parsed])),
+        jnp.asarray(np.stack([pad(p.payload, cap) for p in parsed])),
+        jnp.asarray(np.stack([np.int32(p.payload_nbytes) for p in parsed])),
+        jnp.asarray(np.stack([np.int32(p.nbytes) for p in parsed])))
+
+
+def decode_shards(blobs: List[bytes], mode: str, dtype: np.dtype,
+                  shard_shapes: List[Tuple[int, ...]], verify: bool = True,
+                  backend: Optional[str] = None) -> List[np.ndarray]:
+    """Decode all shards of one leaf; same-shape lossy streams are stacked
+    through the batched decompressors (one compiled call per leaf)."""
+    def loop():
+        return [decode_shard(b, mode, dtype, s, verify=verify,
+                             backend=backend)
+                for b, s in zip(blobs, shard_shapes)]
+    if (mode not in ("szp", "toposzp") or len(blobs) < 2
+            or len(set(shard_shapes)) != 1):
+        return loop()
+    if mode == "szp":
+        if any(cio.peek_magic(b) != cio.MAGIC for b in blobs):
+            raise cio.BadStreamError("szp-mode blob has wrong stream magic")
+        parsed = [cio.deserialize_szp(b) for b in blobs]
+        metas = {(shape2d, eb, block) for _, shape2d, eb, block in parsed}
+        if len(metas) != 1:
+            return loop()
+        (shape2d, eb, block), = metas
+        parts = _stack_szp([p for p, _, _, _ in parsed], block)
+        outs = szp_decompress_batch(parts, tuple(shape2d), eb, block=block,
+                                    backend=backend)
+        return [np.asarray(outs[i]).reshape(shard_shapes[i])
+                .astype(dtype, copy=False) for i in range(len(blobs))]
+    if any(cio.peek_magic(b[16:20]) != cio.MAGIC_TOPO for b in blobs):
+        raise cio.BadStreamError("toposzp-mode blob has wrong magic")
+    parsed = [cio.deserialize_toposzp(b) for b in blobs]
+    metas = {(shape2d, eb, block) for _, shape2d, eb, block in parsed}
+    if len(metas) != 1:
+        return loop()
+    (shape2d, eb, block), = metas
+    comps = [c for c, _, _, _ in parsed]
+    comp = TopoSZpCompressed(
+        _stack_szp([c.szp for c in comps], block),
+        jnp.asarray(np.stack([np.asarray(c.labels2b) for c in comps])),
+        _stack_szp([c.ranks for c in comps], block),
+        jnp.asarray(np.stack([np.int32(c.n_cp) for c in comps])),
+        jnp.asarray(np.stack([np.int32(c.nbytes) for c in comps])))
+    outs = toposzp_decompress_batch(comp, tuple(shape2d), eb, block=block,
+                                    backend=backend)
+    for i, c in enumerate(comps):
+        _verify_topo(outs[i], c, shape2d, verify)
+    return [np.asarray(outs[i]).reshape(shard_shapes[i])
+            .astype(dtype, copy=False) for i in range(len(blobs))]
+
+
 def assemble_leaf(entry: Dict[str, Any], blobs: List[bytes],
-                  verify: bool = True) -> np.ndarray:
+                  verify: bool = True,
+                  backend: Optional[str] = None) -> np.ndarray:
     """Reassemble a full leaf from its (decoded) shard blobs."""
     shape = tuple(entry["shape"])
     dtype = np.dtype(entry["dtype"])
     full = np.empty(shape, dtype)
     covered = 0
-    for sh, blob in zip(entry["shards"], blobs):
-        sub = tuple(int(b) - int(a) for a, b in sh["index"])
-        data = decode_shard(blob, entry["mode"], dtype, sub, verify=verify)
+    subs = [tuple(int(b) - int(a) for a, b in sh["index"])
+            for sh in entry["shards"]]
+    datas = decode_shards(blobs, entry["mode"], dtype, subs, verify=verify,
+                          backend=backend)
+    for sh, data in zip(entry["shards"], datas):
         full[tuple(slice(int(a), int(b)) for a, b in sh["index"])] = data
         covered += data.size
     if covered != full.size:

@@ -69,6 +69,9 @@ class ArchConfig:
     grad_wire_format: str = "int32"   # "int32" (code psum, accounting-only
                                       #   byte win) | "packed" (dist.ring
                                       #   bitpacked ppermute ring all-reduce)
+    # TopoSZp kernel dispatch (core/szp.py, core/toposzp.py, ckpt blobs):
+    #   auto (pallas on TPU, jnp elsewhere) | pallas | interpret | jnp
+    kernel_backend: str = "auto"
     # checkpointing (repro.ckpt v2: sharded blobs + async writer)
     ckpt_mode: str = "raw"            # raw | szp | toposzp leaf mode for
                                       #   large f32 (optimizer/master) leaves

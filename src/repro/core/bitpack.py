@@ -45,6 +45,23 @@ def sum_width(width: int, n_summands: int) -> int:
     return min(MAX_WIDTH, width + (n_summands - 1).bit_length())
 
 
+# Static capacity buckets for the two-pass tiled pack: the *measured* max
+# block width is lifted to the next bucket so the payload capacity (a static
+# shape under jit) shrinks from the 32-bit worst case to ~w_max while the
+# small bucket set bounds recompilations to |WIDTH_BUCKETS| variants.
+WIDTH_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def width_bucket(w_max: int) -> int:
+    """Smallest static capacity bucket holding measured width ``w_max``."""
+    if not 0 <= w_max <= MAX_WIDTH:
+        raise ValueError(f"measured width {w_max} outside [0, {MAX_WIDTH}]")
+    for b in WIDTH_BUCKETS:
+        if w_max <= b:
+            return b
+    return MAX_WIDTH
+
+
 def pack_blocks(mags: jnp.ndarray, widths: jnp.ndarray,
                 max_width: int = MAX_WIDTH
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -91,6 +108,65 @@ def pack_blocks(mags: jnp.ndarray, widths: jnp.ndarray,
     byte = (bits << jnp.arange(8, dtype=jnp.uint32)[None, :]).sum(axis=1)
     byte = jnp.where(j < total, byte, jnp.uint32(0))
     return byte.astype(jnp.uint8), offs, total.astype(jnp.int32)
+
+
+def local_pack_bytes(mags: jnp.ndarray, widths: jnp.ndarray,
+                     max_width: int = MAX_WIDTH) -> jnp.ndarray:
+    """Phase 1 of the tiled pack: every block packed at LOCAL offset 0.
+
+    Returns (B, ceil(K*max_width/8)) uint8 — block b's first ``nb_b`` bytes
+    are exactly its slice of the :func:`pack_blocks` stream; the tail is 0.
+    Per-block independent (no global searchsorted), so the work is
+    ``B*ceil(K*w/8)`` bytes instead of the 32-bit worst-case capacity.
+    This is the jnp oracle for ``kernels/bitpack_pack.py``.
+    """
+    mags = mags.astype(jnp.uint32)
+    b_blocks, k = mags.shape
+    nbm = (k * max_width + 7) // 8
+    w = widths.astype(jnp.int32)[:, None, None]             # (B, 1, 1)
+    t = (jnp.arange(nbm, dtype=jnp.int32)[:, None] * 8
+         + jnp.arange(8, dtype=jnp.int32)[None, :])[None]   # (1, nbm, 8)
+    w_safe = jnp.maximum(w, 1)
+    i = jnp.minimum(t // w_safe, k - 1)                     # value index
+    bit_in_val = (t % w_safe).astype(jnp.uint32)
+    vals = jnp.take_along_axis(mags, i.reshape(b_blocks, nbm * 8), axis=1)
+    bits = (vals.reshape(b_blocks, nbm, 8) >> bit_in_val) & jnp.uint32(1)
+    valid = (t < k * w) & (w > 0)
+    bits = jnp.where(valid, bits, jnp.uint32(0))
+    byte = (bits << jnp.arange(8, dtype=jnp.uint32)).sum(axis=2)
+    return byte.astype(jnp.uint8)
+
+
+def compact_local_bytes(local: jnp.ndarray, widths: jnp.ndarray, k: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Phase 2 of the tiled pack: scatter per-block local bytes to their
+    global offsets.  Offsets are disjoint, so the scatter is collision-free
+    and deterministic; bytes past ``total`` stay 0 (matching
+    :func:`pack_blocks`).  Returns the same (buf, offs, total) contract with
+    cap = B * local.shape[1]."""
+    b_blocks, nbm = local.shape
+    nb = block_nbytes(widths, k)                            # (B,)
+    offs = exclusive_cumsum(nb)
+    total = offs[-1] + nb[-1] if b_blocks > 0 else jnp.int32(0)
+    cap = b_blocks * nbm
+    jb = jnp.arange(nbm, dtype=jnp.int32)[None, :]          # (1, nbm)
+    # invalid slots all map to the dropped index `cap`, so the indices are
+    # NOT unique — don't assert unique_indices (UB under duplicates).
+    idx = jnp.where(jb < nb[:, None], offs[:, None] + jb, cap)
+    buf = jnp.zeros(cap, jnp.uint8).at[idx.reshape(-1)].set(
+        local.reshape(-1), mode="drop")
+    return buf, offs, total.astype(jnp.int32)
+
+
+def pack_blocks_tiled(mags: jnp.ndarray, widths: jnp.ndarray,
+                      max_width: int = MAX_WIDTH
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Two-phase tiled pack: bit-identical valid prefix to
+    :func:`pack_blocks`, same (buf, offs, total) contract, but the capacity
+    and the per-byte gather work scale with ``max_width`` (the measured max
+    width lifted to a :data:`WIDTH_BUCKETS` entry) instead of 32 bits."""
+    return compact_local_bytes(local_pack_bytes(mags, widths, max_width),
+                               widths, mags.shape[1])
 
 
 def unpack_blocks(buf: jnp.ndarray, widths: jnp.ndarray, k: int) -> jnp.ndarray:

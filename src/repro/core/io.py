@@ -13,6 +13,7 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bitpack import width_bucket
 from repro.core.szp import DEFAULT_BLOCK, SZpParts
 from repro.core.toposzp import TopoSZpCompressed
 
@@ -71,7 +72,15 @@ def deserialize_szp(buf: bytes) -> Tuple[SZpParts, Tuple[int, int], float, int]:
     signs = np.frombuffer(buf, np.uint8, n_sign, off); off += n_sign
     first = np.frombuffer(buf, "<i4", nblocks, off); off += 4 * nblocks
     payload = np.frombuffer(buf, np.uint8, len(buf) - off, off)
-    cap = nblocks * ((block * 32 + 7) // 8)
+    # capacity = the stream's width BUCKET (not the 32-bit worst case, and
+    # not the exact byte count either: capacity is a static shape under
+    # jit, so it must be a function of (nblocks, bucket) — a small set —
+    # or every distinct payload length would recompile the decompress
+    # graph).  Safe because unpack_blocks masks every magnitude to its
+    # block width, so clamped reads never leak past-the-end bytes.
+    w_max = int(widths.max(initial=0))
+    wb = width_bucket(min(w_max, 32))
+    cap = max(nblocks * (((block - 1) * wb + 7) // 8), payload.shape[0], 1)
     pay = np.zeros(cap, np.uint8)
     pay[: payload.shape[0]] = payload
     parts = SZpParts(jnp.asarray(const_bits), jnp.asarray(widths),

@@ -20,11 +20,12 @@ saddle pattern; FP/FT suppression happens globally afterwards
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.core.critical_points import SADDLE, classify
+from repro.kernels import ops
 
 MAX_RADIUS = 3  # static gather window 7x7; effective radius is dynamic
 
@@ -102,10 +103,36 @@ def interp_refine(field: jnp.ndarray, sigma: jnp.ndarray,
     return jnp.where(saddle_mask, est, field)
 
 
+def global_shepard_params(field: jnp.ndarray, eb: float):
+    """Scalar (sigma, radius) for the separable kernel path: the adaptive
+    sigma law collapsed to its field mean, radius from the (already
+    global) variation rule.  Traced scalars — no static recompiles."""
+    sigma, radius = adaptive_params(field, eb)
+    return jnp.mean(sigma), radius.reshape(-1)[0]
+
+
 def refine_saddles(recon: jnp.ndarray, labels: jnp.ndarray, eb: float,
-                   rbf_mode: str = "shepard") -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Refine lost saddles; returns (field, applied mask)."""
+                   rbf_mode: str = "shepard",
+                   backend: Optional[str] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Refine lost saddles; returns (field, applied mask).
+
+    ``backend=None`` keeps the per-point-adaptive pure-jnp estimator; a
+    kernels.ops backend runs the separable global-parameter Shepard kernel
+    (``rbf_mode="shepard"`` only — "interp" always takes the jnp solve).
+    The 2*eb clamp and the restored-saddle check are identical either way,
+    so the TopoSZp guarantees are estimator-independent.
+    """
     recon = recon.astype(jnp.float32)
+    if backend is not None and rbf_mode == "shepard":
+        cur = ops.cp_detect(recon, backend=backend)
+        lost = (labels == SADDLE) & (cur != SADDLE)
+        sigma_g, radius_g = global_shepard_params(recon, eb)
+        est = ops.shepard_refine(recon, sigma_g, radius_g, backend=backend)
+        cand_val = jnp.clip(est, recon - eb, recon + eb)
+        cand = jnp.where(lost, cand_val, recon)
+        ok = lost & (ops.cp_detect(cand, backend=backend) == SADDLE)
+        return jnp.where(ok, cand, recon), ok
     cur = classify(recon)
     lost = (labels == SADDLE) & (cur != SADDLE)
 

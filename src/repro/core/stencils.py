@@ -12,16 +12,19 @@ violating the bound (paper: "we deliberately avoid such situations").
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.core.critical_points import MAXIMA, MINIMA, classify, neighbor_min_max
+from repro.kernels import ops
 from repro.utils import ulp_step
 
 
 def apply_extrema_stencils(recon: jnp.ndarray, labels: jnp.ndarray,
-                           ranks: jnp.ndarray, eb: float
+                           ranks: jnp.ndarray, eb: float,
+                           backend: Optional[str] = None,
+                           cur: Optional[jnp.ndarray] = None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Restore lost extrema on the SZp reconstruction.
 
@@ -30,12 +33,19 @@ def apply_extrema_stencils(recon: jnp.ndarray, labels: jnp.ndarray,
       labels: (ny, nx) original CD labels from the stream.
       ranks:  (ny, nx) same-bin ranks from the stream (delta in the paper).
       eb:     the user error bound eps (correction budget is +-eb on top).
+      backend: None keeps the legacy pure-jnp math; a kernels.ops backend
+        dispatches the CP^ reclassification and the fused extrema stencil
+        through the kernel suite (bit-identical to the jnp math).
+      cur:    precomputed ``classify(recon)`` labels, if the caller has them.
 
     Returns:
       (corrected field, bool mask of applied corrections)
     """
+    if backend is not None:
+        return _apply_extrema_stencils_ops(recon, labels, ranks, eb,
+                                           backend, cur)
     recon = recon.astype(jnp.float32)
-    cur = classify(recon)
+    cur = classify(recon) if cur is None else cur
     is_min = labels == MINIMA
     is_max = labels == MAXIMA
     is_cp = labels != 0
@@ -64,3 +74,22 @@ def apply_extrema_stencils(recon: jnp.ndarray, labels: jnp.ndarray,
     sep = jnp.where(is_min, -delta, delta)
     out = jnp.where(survive, ulp_step(out, sep), out)
     return out, (ok_min | ok_max | survive)
+
+
+def _apply_extrema_stencils_ops(recon, labels, ranks, eb: float,
+                                backend: str, cur=None):
+    """Kernel-dispatched form: the fused stencil (kernels/extrema_restore)
+    restores lost extrema; the RP separation for surviving CPs rides on
+    top.  An applied correction always moves the value (a lost minimum has
+    nmin <= recon, so its target sits strictly below recon; dually for
+    maxima), so ``ext != recon`` recovers the applied mask exactly."""
+    recon = recon.astype(jnp.float32)
+    cur = ops.cp_detect(recon, backend=backend) if cur is None else cur
+    ext = ops.extrema_restore(recon, labels, cur, ranks, eb, backend=backend)
+    applied = ext != recon
+    is_cp = labels != 0
+    delta = jnp.maximum(ranks, 1)
+    survive = is_cp & ~applied
+    sep = jnp.where(labels == MINIMA, -delta, delta)
+    out = jnp.where(survive, ulp_step(ext, sep), ext)
+    return out, (applied | survive)

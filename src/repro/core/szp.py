@@ -9,25 +9,36 @@ core/toposzp.py):
   (4) first-element value per block    4*B bytes (quantized int32 outlier)
   (5) packed magnitude byte stream     variable (sum of per-block widths)
 
-All stages are jit-able with static shapes; compressed buffers are fixed
-*capacity* with a dynamic valid ``nbytes`` (see DESIGN.md hardware notes).
-A lossless integer mode (used for the TopoSZp rank metadata, which must not
-be quantized) reuses stages (1)-(5) on raw int32 values.
+The float pipeline dispatches its QZ+LZ / QZ^ math through ``kernels.ops``
+(``backend={"pallas","interpret","jnp"}``; streams are bit-identical across
+backends) and runs the BE stage as a TWO-PASS tiled pack: pass 1 measures
+the per-block widths, the max width is lifted to a static
+``bitpack.WIDTH_BUCKETS`` capacity on the host, and pass 2 packs at that
+capacity — ``B*ceil(K*w_bucket/8)`` bytes instead of the 32-bit worst case
+(typically 4-8x less buffer and gather work).  ``compress_codes`` /
+``decompress_codes`` keep the one-shot jit-able worst-case form for
+callers that embed them in a larger jit (core/baselines.py, core/topo3d.py)
+and for the lossless integer mode (the TopoSZp rank metadata).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitpack
-from repro.core.quantize import dequantize, quantize
+from repro.kernels import ops
 from repro.utils import bitwidth, cdiv, pad_to_multiple
 
 DEFAULT_BLOCK = 32
 HEADER_BYTES = 32  # magic/version/n/shape/block/eb — accounted, materialized in io.py
+
+# f32 integer-exactness limit of the MXU tri-matmul dequant (kernels/
+# szp_quant.py): every partial delta sum must stay below 2^24.
+TRI_DEQUANT_EXACT = 1 << 24
 
 
 class SZpParts(NamedTuple):
@@ -46,62 +57,213 @@ def _blocked_codes(codes: jnp.ndarray, block: int) -> jnp.ndarray:
     return q.reshape(-1, block)
 
 
-def compress_codes(codes: jnp.ndarray, block: int = DEFAULT_BLOCK) -> SZpParts:
-    """Lossless stages (1)-(5) over int32 codes (B + LZ + BE)."""
-    qb = _blocked_codes(codes.astype(jnp.int32).ravel(), block)
-    nblocks, k = qb.shape
+def _blocked_field(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """(B, K) blocked float view; edge padding == padding the codes."""
+    f = pad_to_multiple(x.astype(jnp.float32).reshape(-1), block, axis=0,
+                        mode="edge")
+    return f.reshape(-1, block)
+
+
+def _delta_blocks(qb: jnp.ndarray):
+    """B + LZ over (B, K) int32 codes -> (first, mags, signs, widths)."""
     first = qb[:, 0]
-    deltas = qb[:, 1:] - qb[:, :-1]                       # (B, K-1) intra-block LZ
-    signs = jnp.concatenate(
-        [jnp.zeros((nblocks, 1), jnp.uint8), (deltas < 0).astype(jnp.uint8)], axis=1)
+    deltas = qb[:, 1:] - qb[:, :-1]                       # (B, K-1)
+    signs = (deltas < 0).astype(jnp.int32)
     mags = jnp.abs(deltas).astype(jnp.uint32)
     widths = bitwidth(mags.max(axis=1))                    # (B,)
-    payload, _, total = bitpack.pack_blocks(mags, widths)
+    return first, mags, signs, widths
+
+
+def _assemble_parts(first, mags, signs, widths, max_width: int,
+                    backend: Optional[str] = None) -> SZpParts:
+    """BE stage + fixed sections -> SZpParts (jit-able at static max_width).
+
+    ``backend=None`` keeps the legacy one-shot worst-case packer (no tile
+    kernel, 32-bit capacity); a resolved backend runs the tiled two-phase
+    pack at the static ``max_width`` bucket.
+    """
+    nblocks = first.shape[0]
+    if backend is None:
+        payload, _, total = bitpack.pack_blocks(mags, widths,
+                                                max_width=max_width)
+    else:
+        local = ops.local_pack(mags, widths, max_width=max_width,
+                               backend=backend)
+        payload, _, total = bitpack.compact_local_bytes(local, widths,
+                                                        mags.shape[1])
     const_bits = bitpack.pack_bits((widths == 0).astype(jnp.uint8))
-    signs_packed = bitpack.pack_bits(signs.reshape(-1))
+    signs_full = jnp.concatenate(
+        [jnp.zeros((nblocks, 1), jnp.int32), signs], axis=1)
+    signs_packed = bitpack.pack_bits(signs_full.reshape(-1).astype(jnp.uint8))
     nbytes = (HEADER_BYTES + const_bits.shape[0] + nblocks
               + signs_packed.shape[0] + 4 * nblocks + total)
     return SZpParts(const_bits, widths.astype(jnp.uint8), signs_packed,
                     first, payload, total, nbytes.astype(jnp.int32))
 
 
+def compress_codes(codes: jnp.ndarray, block: int = DEFAULT_BLOCK) -> SZpParts:
+    """Lossless stages (1)-(5) over int32 codes (B + LZ + BE).
+
+    One-shot, fully jit-able (worst-case 32-bit payload capacity); the
+    float pipeline below uses the two-pass tiled pack instead.
+    """
+    qb = _blocked_codes(codes.astype(jnp.int32).ravel(), block)
+    first, mags, signs, widths = _delta_blocks(qb)
+    return _assemble_parts(first, mags, signs, widths, bitpack.MAX_WIDTH)
+
+
 def decompress_codes(parts: SZpParts, n: int,
                      block: int = DEFAULT_BLOCK) -> jnp.ndarray:
-    """Invert :func:`compress_codes` -> (n,) int32 codes."""
-    widths = parts.widths.astype(jnp.int32)
-    nblocks = widths.shape[0]
-    k = block
-    mags = bitpack.unpack_blocks(parts.payload, widths, k - 1)  # (B, K-1)
-    signs = bitpack.unpack_bits(parts.signs, nblocks * k).reshape(nblocks, k)
+    """Invert :func:`compress_codes` -> (n,) int32 codes (exact int path)."""
+    mags, signs, nblocks = _unpack_sections(parts, block)
     deltas = jnp.where(signs[:, 1:] > 0, -(mags.astype(jnp.int32)),
                        mags.astype(jnp.int32))
     q = parts.first[:, None] + jnp.concatenate(
-        [jnp.zeros((nblocks, 1), jnp.int32), jnp.cumsum(deltas, axis=1)], axis=1)
+        [jnp.zeros((nblocks, 1), jnp.int32), jnp.cumsum(deltas, axis=1)],
+        axis=1)
     return q.reshape(-1)[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def szp_compress(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK) -> SZpParts:
-    """Full SZp compression of a float field (any shape; flattened row-major)."""
-    codes = quantize(x.reshape(-1), eb)
-    return compress_codes(codes, block=block)
+def _unpack_sections(parts: SZpParts, block: int):
+    """BE^ over sections (2)/(3)/(5) -> (mags (B,K-1), signs (B,K), B)."""
+    widths = parts.widths.astype(jnp.int32)
+    nblocks = widths.shape[0]
+    mags = bitpack.unpack_blocks(parts.payload, widths, block - 1)
+    signs = bitpack.unpack_bits(parts.signs, nblocks * block) \
+        .reshape(nblocks, block)
+    return mags, signs, nblocks
 
 
-@functools.partial(jax.jit, static_argnames=("shape", "block", "recon"))
+# --------------------------------------------------------------------------
+# Float pipeline: backend-threaded two-pass compress / guarded decompress
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def _quant_stage(x: jnp.ndarray, eb: float, block: int, backend: str):
+    """Pass 1: fused QZ+LZ through kernels.ops + measured max width."""
+    xb = _blocked_field(x, block)
+    first, mags, signs, widths = ops.szp_quant(xb, eb, backend=backend)
+    return first, mags, signs, widths, widths.max()
+
+
+@functools.partial(jax.jit, static_argnames=("max_width", "backend"))
+def _pack_stage(first, mags, signs, widths, max_width: int,
+                backend: str) -> SZpParts:
+    """Pass 2: tiled BE pack at the static capacity bucket."""
+    return _assemble_parts(first, mags, signs, widths, max_width,
+                           backend=backend)
+
+
+def szp_compress(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK,
+                 backend: Optional[str] = None) -> SZpParts:
+    """Full SZp compression of a float field (any shape; flattened
+    row-major).  Stream bytes are bit-identical across backends; the one
+    host sync reads the measured max width for the static capacity bucket.
+    """
+    backend = ops.resolve_backend(backend)
+    first, mags, signs, widths, w_max = _quant_stage(x, eb, block, backend)
+    mw = bitpack.width_bucket(int(w_max))
+    return _pack_stage(first, mags, signs, widths, mw, backend)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block", "recon", "backend"))
+def _dequant_stage(parts: SZpParts, n: int, eb: float, block: int,
+                   recon: str, backend: str) -> jnp.ndarray:
+    """BE^ -> LZ^+B^ -> QZ^ through kernels.ops -> (n,) float32."""
+    mags, signs, _ = _unpack_sections(parts, block)
+    out = ops.szp_dequant(parts.first, mags, signs[:, 1:], eb,
+                          backend=backend)
+    if recon == "left":
+        out = out - eb
+    elif recon != "center":
+        raise ValueError(f"unknown recon mode: {recon}")
+    return out.reshape(-1)[:n]
+
+
 def szp_decompress(parts: SZpParts, shape: Sequence[int], eb: float,
-                   block: int = DEFAULT_BLOCK, recon: str = "center") -> jnp.ndarray:
+                   block: int = DEFAULT_BLOCK, recon: str = "center",
+                   backend: Optional[str] = None) -> jnp.ndarray:
     """Full SZp decompression back to a float field of ``shape``."""
+    backend = ops.resolve_backend(backend)
     n = 1
     for s in shape:
         n *= s
-    codes = decompress_codes(parts, n, block=block)
-    return dequantize(codes, eb, recon=recon).reshape(shape)
+    backend = _dequant_backend_for(parts, block, backend)
+    out = _dequant_stage(parts, n, eb, block, recon, backend)
+    return out.reshape(shape)
 
 
-def szp_roundtrip(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK
+def _dequant_backend_for(parts: SZpParts, block: int, backend: str) -> str:
+    """Resolved dequant backend after the 2^24 exactness guard."""
+    if backend == "jnp":
+        return backend
+    w_max = int(np.asarray(parts.widths).max(initial=0))
+    max_delta = (1 << min(w_max, 31)) - 1
+    if (block - 1) * max_delta >= TRI_DEQUANT_EXACT:
+        return "jnp"                    # int32-cumsum fallback (exact)
+    return backend
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def _quant_stage_batch(xs: jnp.ndarray, eb: float, block: int, backend: str):
+    out = jax.vmap(lambda x: _quant_stage(x, eb, block, backend))(xs)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("max_width", "backend"))
+def _pack_stage_batch(first, mags, signs, widths, max_width: int,
+                      backend: str) -> SZpParts:
+    return jax.vmap(lambda f, m, s, w: _assemble_parts(
+        f, m, s, w, max_width, backend=backend))(first, mags, signs, widths)
+
+
+def szp_compress_batch(xs: jnp.ndarray, eb: float,
+                       block: int = DEFAULT_BLOCK,
+                       backend: Optional[str] = None) -> SZpParts:
+    """Compress N stacked same-shape fields in one compiled call; every
+    array of the result carries a leading batch axis.  Streams are
+    byte-identical to N :func:`szp_compress` calls (the shared capacity
+    bucket covers the batch max width; valid bytes are unaffected)."""
+    if xs.ndim < 2:
+        raise ValueError(f"expected (N, ...) stacked fields, got {xs.shape}")
+    backend = ops.resolve_backend(backend)
+    first, mags, signs, widths, w_max = _quant_stage_batch(
+        xs, eb, block=block, backend=backend)
+    mw = bitpack.width_bucket(int(w_max.max()))
+    return _pack_stage_batch(first, mags, signs, widths, max_width=mw,
+                             backend=backend)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block", "recon", "backend"))
+def _dequant_stage_batch(parts: SZpParts, n: int, eb: float, block: int,
+                         recon: str, backend: str) -> jnp.ndarray:
+    return jax.vmap(
+        lambda p: _dequant_stage(p, n, eb, block, recon, backend))(parts)
+
+
+def szp_decompress_batch(parts: SZpParts, shape: Sequence[int], eb: float,
+                         block: int = DEFAULT_BLOCK, recon: str = "center",
+                         backend: Optional[str] = None) -> jnp.ndarray:
+    """Decompress a batched stream -> (N, *shape); equal to stacking N
+    per-field :func:`szp_decompress` calls."""
+    backend = ops.resolve_backend(backend)
+    n = 1
+    for s in shape:
+        n *= s
+    backend = _dequant_backend_for(parts, block, backend)
+    out = _dequant_stage_batch(parts, n=n, eb=eb, block=block, recon=recon,
+                               backend=backend)
+    return out.reshape((parts.widths.shape[0],) + tuple(shape))
+
+
+def szp_roundtrip(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK,
+                  backend: Optional[str] = None
                   ) -> Tuple[jnp.ndarray, SZpParts]:
-    parts = szp_compress(x, eb, block=block)
-    return szp_decompress(parts, tuple(x.shape), eb, block=block), parts
+    parts = szp_compress(x, eb, block=block, backend=backend)
+    return szp_decompress(parts, tuple(x.shape), eb, block=block,
+                          backend=backend), parts
 
 
 def compression_ratio(x: jnp.ndarray, parts: SZpParts) -> jnp.ndarray:

@@ -23,7 +23,7 @@ from repro.core.quantize import dequantize, quantize
 from repro.core.relative_order import compute_ranks
 from repro.core.szp import (DEFAULT_BLOCK, compress_codes,
                             decompress_codes)
-from repro.core.toposzp import (TopoSZpCompressed, _cp_first_order,
+from repro.core.toposzp import (TopoSZpCompressed, _cp_first_dest,
                                 rank_stream_bytes)
 from repro.utils import ulp_step
 
@@ -112,8 +112,10 @@ def toposzp3d_compress(field: jnp.ndarray, eb: float,
     labels_flat = labels.reshape(-1)
     labels2b = bitpack.pack_2bit(labels_flat)
     n_cp = (labels_flat != 0).sum().astype(jnp.int32)
-    order = _cp_first_order(labels_flat)
-    rank_parts = compress_codes(ranks.reshape(-1)[order], block=block)
+    dest = _cp_first_dest(labels_flat)
+    ranks_sorted = jnp.zeros(labels_flat.shape[0], jnp.int32).at[dest].set(
+        ranks.reshape(-1), unique_indices=True)
+    rank_parts = compress_codes(ranks_sorted, block=block)
     nbytes = (szp_parts.nbytes + labels2b.shape[0]
               + rank_stream_bytes(n_cp, rank_parts.payload_nbytes, block))
     return TopoSZpCompressed(szp_parts, labels2b, rank_parts, n_cp,
@@ -134,8 +136,8 @@ def toposzp3d_decompress(comp: TopoSZpCompressed, shape: Sequence[int],
     rs = decompress_codes(comp.ranks, min(n_codes, n), block=block)
     if n_codes < n:
         rs = jnp.concatenate([rs, jnp.zeros(n - n_codes, jnp.int32)])
-    order = _cp_first_order(labels_flat)
-    ranks = jnp.zeros(n, jnp.int32).at[order].set(rs[:n]).reshape(shape)
+    dest = _cp_first_dest(labels_flat)
+    ranks = rs[:n][dest].reshape(shape)
 
     # extrema stencils (6-neighbor) + rank separation
     cur = classify3d(base)

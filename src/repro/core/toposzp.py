@@ -6,28 +6,49 @@ Decompression:  BE^ -> LZ^+B^ -> QZ^ -> MD^ -> CP^+RP^ -> RS^  (Sec. IV-B)
 Stream layout = SZp sections (1)-(5) plus (6) the 2-bit critical-point label
 map and (7) the relative-order metadata, itself re-compressed with a second
 lossless B+LZ+BE pass (paper Fig. 6).
+
+Every stage dispatches through ``kernels.ops`` (``backend={"pallas",
+"interpret","jnp"}``; ``None`` resolves to the hardware default): CD via
+``cp_detect``, QZ+LZ via the fused ``szp_quant``, BE via the tiled
+two-pass pack (static capacity = measured width bucket, see core/szp.py),
+QZ^ via ``szp_dequant`` behind the |code|<2^24 tri-matmul guard, CP^+RP^
+via ``extrema_restore`` and RS^ via the separable ``shepard_refine``.
+Stream bytes are bit-identical across all backends.  The rank stream
+(section 7) must stay lossless, so its decode always takes the exact
+int32-cumsum path regardless of backend.
+
+``toposzp_compress_batch`` / ``toposzp_decompress_batch`` stack N
+same-shape fields into ONE compiled call (vmap = grid over the batch dim),
+so multi-field workloads (checkpoint shards, the fig7 bench) stop paying a
+dispatch + trace per field.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitpack
-from repro.core.critical_points import classify
 from repro.core.guarantees import enforce_no_fp_ft
-from repro.core.quantize import dequantize, quantize
+from repro.core.quantize import quantize
 from repro.core.rbf import refine_saddles
 from repro.core.relative_order import compute_ranks
 from repro.core.stencils import apply_extrema_stencils
 from repro.core.szp import (DEFAULT_BLOCK, HEADER_BYTES, SZpParts,
-                            compress_codes, decompress_codes)
+                            _assemble_parts, _blocked_codes, _blocked_field,
+                            _delta_blocks, _dequant_backend_for,
+                            _unpack_sections, decompress_codes)
+from repro.kernels import ops
 
 
 class TopoSZpCompressed(NamedTuple):
-    """Full TopoSZp stream: SZp sections + topology metadata sections."""
+    """Full TopoSZp stream: SZp sections + topology metadata sections.
+
+    The batched APIs use the same container with a leading batch axis on
+    every array (``batch_slice`` recovers the per-field view).
+    """
     szp: SZpParts                # sections (1)-(5)
     labels2b: jnp.ndarray        # section (6): packed 2-bit label map
     ranks: SZpParts              # section (7): lossless B+LZ+BE over ranks
@@ -35,8 +56,12 @@ class TopoSZpCompressed(NamedTuple):
     nbytes: jnp.ndarray          # () int32 total compressed size
 
 
-def _cp_first_order(labels_flat: jnp.ndarray) -> jnp.ndarray:
-    """Stable permutation putting critical points first (row-major order).
+def _cp_first_dest(labels_flat: jnp.ndarray) -> jnp.ndarray:
+    """Destination index of every point under the stable CP-first partition.
+
+    Equivalent to inverting ``argsort(labels == 0, stable)`` but realized
+    as two prefix sums + a select — O(n) instead of a full sort on the
+    decompression AND compression hot paths.
 
     Beyond-paper ratio optimization (§Perf/compression): ranks are stored
     only for the n_cp critical points instead of densely — the decompressor
@@ -44,7 +69,11 @@ def _cp_first_order(labels_flat: jnp.ndarray) -> jnp.ndarray:
     of the rank stream carry data and the accounting/serialization slices
     the stream there.
     """
-    return jnp.argsort((labels_flat == 0).astype(jnp.int32), stable=True)
+    noncp = labels_flat == 0
+    n_cp = (~noncp).sum()
+    c_cp = jnp.cumsum(~noncp) - 1
+    c_non = jnp.cumsum(noncp) - 1
+    return jnp.where(noncp, n_cp + c_non, c_cp).astype(jnp.int32)
 
 
 def rank_stream_bytes(n_cp: jnp.ndarray, payload_nbytes: jnp.ndarray,
@@ -55,82 +84,218 @@ def rank_stream_bytes(n_cp: jnp.ndarray, payload_nbytes: jnp.ndarray,
             + 4 * ub + payload_nbytes).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def toposzp_compress(field: jnp.ndarray, eb: float,
-                     block: int = DEFAULT_BLOCK) -> TopoSZpCompressed:
-    """Compress a 2-D scalar field with topology metadata."""
+# --------------------------------------------------------------------------
+# Compression
+# --------------------------------------------------------------------------
+
+def _compress_measure(field: jnp.ndarray, eb: float, block: int,
+                      backend: str):
+    """Single-field pass 1: everything except the width-bucketed BE pack."""
     field = field.astype(jnp.float32)
     codes = quantize(field, eb)
 
     # --- CD + RP (the lightweight topology stage, before lossy QZ) ---
-    labels = classify(field)
+    labels = ops.cp_detect(field, backend=backend)
     ranks = compute_ranks(field, labels, codes)
 
-    # --- QZ -> B+LZ -> BE (standard SZp on the codes) ---
-    szp_parts = compress_codes(codes.reshape(-1), block=block)
+    # --- QZ + LZ fused over (B, K) blocks ---
+    first, mags, signs, widths = ops.szp_quant(
+        _blocked_field(field, block), eb, backend=backend)
 
     # --- metadata sections ---
     labels_flat = labels.reshape(-1)
     labels2b = bitpack.pack_2bit(labels_flat)
     n_cp = (labels_flat != 0).sum().astype(jnp.int32)
-    order = _cp_first_order(labels_flat)
-    ranks_sorted = ranks.reshape(-1)[order]       # CP ranks first, zeros after
-    rank_parts = compress_codes(ranks_sorted, block=block)   # lossless
+    dest = _cp_first_dest(labels_flat)
+    ranks_sorted = jnp.zeros(labels_flat.shape[0], jnp.int32).at[dest].set(
+        ranks.reshape(-1), unique_indices=True)   # CP ranks first, zeros after
+    rfirst, rmags, rsigns, rwidths = _delta_blocks(
+        _blocked_codes(ranks_sorted, block))
+    return ((first, mags, signs, widths), (rfirst, rmags, rsigns, rwidths),
+            labels2b, n_cp, widths.max(), rwidths.max())
 
-    nbytes = (szp_parts.nbytes + labels2b.shape[0]
+
+_measure_one = jax.jit(_compress_measure,
+                       static_argnames=("block", "backend"))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def _measure_batch(fields: jnp.ndarray, eb: float, block: int, backend: str):
+    out = jax.vmap(
+        lambda f: _compress_measure(f, eb, block, backend))(fields)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block", "mw_main", "mw_rank",
+                                             "backend", "batched"))
+def _pack_streams(main, rank, labels2b, n_cp, block: int, mw_main: int,
+                  mw_rank: int, backend: str,
+                  batched: bool = False) -> TopoSZpCompressed:
+    """Pass 2: tiled BE pack of both streams at static capacity buckets."""
+    def pack(args):
+        szp_parts = _assemble_parts(*args[0], mw_main, backend=backend)
+        rank_parts = _assemble_parts(*args[1], mw_rank, backend=backend)
+        return szp_parts, rank_parts
+    if batched:
+        szp_parts, rank_parts = jax.vmap(pack)((main, rank))
+        labels_bytes = labels2b.shape[1]
+    else:
+        szp_parts, rank_parts = pack((main, rank))
+        labels_bytes = labels2b.shape[0]
+    nbytes = (szp_parts.nbytes + labels_bytes
               + rank_stream_bytes(n_cp, rank_parts.payload_nbytes, block))
     return TopoSZpCompressed(szp_parts, labels2b, rank_parts, n_cp,
                              nbytes.astype(jnp.int32))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("shape", "block", "rbf_mode", "recon"))
-def toposzp_decompress(comp: TopoSZpCompressed, shape: Sequence[int], eb: float,
-                       block: int = DEFAULT_BLOCK, rbf_mode: str = "shepard",
-                       recon: str = "center") -> jnp.ndarray:
-    """Decompress with extrema restoration + RBF saddle refinement.
+def toposzp_compress(field: jnp.ndarray, eb: float,
+                     block: int = DEFAULT_BLOCK,
+                     backend: Optional[str] = None) -> TopoSZpCompressed:
+    """Compress a 2-D scalar field with topology metadata."""
+    backend = ops.resolve_backend(backend)
+    main, rank, labels2b, n_cp, w_max, rw_max = _measure_one(
+        field, eb, block=block, backend=backend)
+    return _pack_streams(main, rank, labels2b, n_cp, block=block,
+                         mw_main=bitpack.width_bucket(int(w_max)),
+                         mw_rank=bitpack.width_bucket(int(rw_max)),
+                         backend=backend)
 
-    Guarantees on the output (tested in tests/test_toposzp_guarantees.py):
-      * |out - orig| <= 2 eb (relaxed-but-strict bound, paper Table I)
-      * zero FP, zero FT w.r.t. the original label map
+
+def toposzp_compress_batch(fields: jnp.ndarray, eb: float,
+                           block: int = DEFAULT_BLOCK,
+                           backend: Optional[str] = None
+                           ) -> TopoSZpCompressed:
+    """Compress N stacked same-shape fields in one compiled call.
+
+    ``fields`` is (N, ny, nx); every array of the result carries a leading
+    batch axis.  Streams are byte-identical to N per-field calls (the
+    shared capacity bucket covers the batch max width; valid bytes are
+    unaffected).  Use :func:`batch_slice` / :func:`serialize` helpers to
+    recover per-field streams.
     """
+    if fields.ndim != 3:
+        raise ValueError(f"expected (N, ny, nx) fields, got {fields.shape}")
+    backend = ops.resolve_backend(backend)
+    main, rank, labels2b, n_cp, w_max, rw_max = _measure_batch(
+        fields, eb, block=block, backend=backend)
+    return _pack_streams(main, rank, labels2b, n_cp, block=block,
+                         mw_main=bitpack.width_bucket(int(w_max.max())),
+                         mw_rank=bitpack.width_bucket(int(rw_max.max())),
+                         backend=backend, batched=True)
+
+
+def batch_slice(comp: TopoSZpCompressed, i: int) -> TopoSZpCompressed:
+    """Per-field view of a batched stream (arrays indexed on the batch
+    axis); byte-identical to the per-field API's output."""
+    return jax.tree_util.tree_map(lambda a: a[i], comp)
+
+
+# --------------------------------------------------------------------------
+# Decompression
+# --------------------------------------------------------------------------
+
+def _decode_field(comp: TopoSZpCompressed, shape, eb: float, block: int,
+                  recon: str, deq_backend: str, backend: str):
+    """BE^ -> LZ^+B^ -> QZ^ -> MD^ for one field -> (base, labels, ranks)."""
     ny, nx = shape
     n = ny * nx
 
-    # --- BE^ -> LZ^ + B^ -> QZ^ (standard SZp reconstruction) ---
-    codes = decompress_codes(comp.szp, n, block=block)
-    base = dequantize(codes, eb, recon=recon).reshape(shape)
+    # --- QZ^ through the kernel dequant (guarded by the caller) ---
+    mags, signs, _ = _unpack_sections(comp.szp, block)
+    base = ops.szp_dequant(comp.szp.first, mags, signs[:, 1:], eb,
+                           backend=deq_backend)
+    if recon == "left":
+        base = base - eb
+    elif recon != "center":
+        raise ValueError(f"unknown recon mode: {recon}")
+    base = base.reshape(-1)[:n].reshape(shape)
 
     # --- MD^: metadata extraction ---
     labels = bitpack.unpack_2bit(comp.labels2b, n).reshape(shape)
     labels_flat = labels.reshape(-1)
     # sparse rank stream: CP-first order; the stream may be trimmed to its
     # used prefix (deserialization), so decode its actual block count.
+    # Rank codes must stay lossless -> always the exact int32 path.
     n_codes = comp.ranks.widths.shape[0] * block
     ranks_sorted = decompress_codes(comp.ranks, min(n_codes, n), block=block)
     if n_codes < n:
         ranks_sorted = jnp.concatenate(
             [ranks_sorted, jnp.zeros(n - n_codes, jnp.int32)])
-    order = _cp_first_order(labels_flat)
-    ranks = jnp.zeros(n, jnp.int32).at[order].set(
-        ranks_sorted[:n]).reshape(shape)
+    dest = _cp_first_dest(labels_flat)
+    ranks = ranks_sorted[:n][dest].reshape(shape)
+    return base, labels, ranks
 
-    # --- CP^ + RP^: extrema stencils with same-bin rank separation ---
-    ext, _ = apply_extrema_stencils(base, labels, ranks, eb)
 
-    # --- RS^: RBF refinement of lost saddles ---
-    ref, _ = refine_saddles(ext, labels, eb, rbf_mode=rbf_mode)
-
-    # --- FP/FT suppression (zero false positives / false types) ---
+def _restore_field(base, labels, ranks, eb: float, rbf_mode: str,
+                   backend: str):
+    """CP^+RP^ -> RS^ -> FP/FT suppression for one decoded field."""
+    ext, _ = apply_extrema_stencils(base, labels, ranks, eb, backend=backend)
+    ref, _ = refine_saddles(ext, labels, eb, rbf_mode=rbf_mode,
+                            backend=backend)
     out, _ = enforce_no_fp_ft(base, ref, labels)
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("shape", "block", "rbf_mode",
+                                             "recon", "deq_backend",
+                                             "backend"))
+def _decompress_one(comp, eb, shape, block, rbf_mode, recon, deq_backend,
+                    backend):
+    base, labels, ranks = _decode_field(comp, shape, eb, block, recon,
+                                        deq_backend, backend)
+    return _restore_field(base, labels, ranks, eb, rbf_mode, backend)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block", "rbf_mode",
+                                             "recon", "deq_backend",
+                                             "backend"))
+def _decompress_batch(comp, eb, shape, block, rbf_mode, recon, deq_backend,
+                      backend):
+    def one(c):
+        base, labels, ranks = _decode_field(c, shape, eb, block, recon,
+                                            deq_backend, backend)
+        return _restore_field(base, labels, ranks, eb, rbf_mode, backend)
+    return jax.vmap(one)(comp)
+
+
+def toposzp_decompress(comp: TopoSZpCompressed, shape: Sequence[int],
+                       eb: float, block: int = DEFAULT_BLOCK,
+                       rbf_mode: str = "shepard", recon: str = "center",
+                       backend: Optional[str] = None) -> jnp.ndarray:
+    """Decompress with extrema restoration + RBF saddle refinement.
+
+    Guarantees on the output (tested in tests/test_toposzp_guarantees.py),
+    independent of the backend:
+      * |out - orig| <= 2 eb (relaxed-but-strict bound, paper Table I)
+      * zero FP, zero FT w.r.t. the original label map
+    """
+    backend = ops.resolve_backend(backend)
+    deq_backend = _dequant_backend_for(comp.szp, block, backend)
+    return _decompress_one(comp, eb, shape=tuple(shape), block=block,
+                           rbf_mode=rbf_mode, recon=recon,
+                           deq_backend=deq_backend, backend=backend)
+
+
+def toposzp_decompress_batch(comp: TopoSZpCompressed, shape: Sequence[int],
+                             eb: float, block: int = DEFAULT_BLOCK,
+                             rbf_mode: str = "shepard",
+                             recon: str = "center",
+                             backend: Optional[str] = None) -> jnp.ndarray:
+    """Decompress a batched stream -> (N, ny, nx); equal to stacking N
+    per-field :func:`toposzp_decompress` calls."""
+    backend = ops.resolve_backend(backend)
+    deq_backend = _dequant_backend_for(comp.szp, block, backend)
+    return _decompress_batch(comp, eb, shape=tuple(shape), block=block,
+                             rbf_mode=rbf_mode, recon=recon,
+                             deq_backend=deq_backend, backend=backend)
+
+
 def toposzp_roundtrip(field: jnp.ndarray, eb: float,
                       block: int = DEFAULT_BLOCK,
-                      rbf_mode: str = "shepard"
+                      rbf_mode: str = "shepard",
+                      backend: Optional[str] = None
                       ) -> Tuple[jnp.ndarray, TopoSZpCompressed]:
-    comp = toposzp_compress(field, eb, block=block)
+    comp = toposzp_compress(field, eb, block=block, backend=backend)
     out = toposzp_decompress(comp, tuple(field.shape), eb, block=block,
-                             rbf_mode=rbf_mode)
+                             rbf_mode=rbf_mode, backend=backend)
     return out, comp

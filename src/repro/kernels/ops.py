@@ -1,40 +1,75 @@
 """Public jit'd wrappers for the Pallas kernels.
 
 Every op takes ``backend=`` with three settings:
-  * "pallas"     — pl.pallas_call compiled for TPU (the production path)
-  * "interpret"  — same kernel body, interpreted on CPU (validation path;
-                   the default in this CPU container)
+  * "pallas"     — pl.pallas_call compiled for TPU (the production path);
+                   off-TPU it transparently downgrades to "interpret" so
+                   the same call sites work in the CPU container
+  * "interpret"  — same kernel body, interpreted on CPU (validation path)
   * "jnp"        — the pure-jnp oracle from kernels/ref.py
 
-Wrappers own all padding/unpadding so callers see natural shapes.
+``resolve_backend(None)`` picks the production default for the current
+hardware ("pallas" on TPU, "jnp" elsewhere — interpret mode is a
+validation tool, far too slow to be a CPU production path) and honors the
+``REPRO_KERNEL_BACKEND`` env override (the CI oracle leg forces "jnp").
+
+Wrappers own all padding/unpadding so callers see natural shapes.  Row
+padding follows ONE rule (``_row_tile``): the tile is capped at the padded
+row count rounded up to the f32 sublane (8), and rows are padded to a
+multiple of the tile — correct for any (b, tb) combination including
+b < tb with non-divisible shapes (the old ``min(tb, b)`` adjustment
+handed odd, non-sublane-aligned tiles like 100 or 129 to the kernel).
 """
 from __future__ import annotations
 
+import os
+
+import jax
 import jax.numpy as jnp
 
+from repro.kernels import bitpack_pack as _bpk
 from repro.kernels import cp_detect as _cpk
 from repro.kernels import extrema_restore as _exk
 from repro.kernels import rbf_refine as _rbk
 from repro.kernels import szp_quant as _sqk
 from repro.kernels import ref as _ref
-from repro.utils import pad_to_multiple
+from repro.utils import cdiv, pad_to_multiple
 
 DEFAULT_BACKEND = "interpret"
+BACKENDS = ("pallas", "interpret", "jnp")
+_ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+
+
+def resolve_backend(backend=None) -> str:
+    """Resolve a backend knob ('auto'/None -> hardware default) and
+    downgrade "pallas" to "interpret" when no TPU is attached."""
+    if backend in (None, "auto"):
+        backend = os.environ.get(_ENV_BACKEND) or (
+            "pallas" if jax.default_backend() == "tpu" else "jnp")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "pallas" and jax.default_backend() != "tpu":
+        return "interpret"
+    return backend
 
 
 def _interp(backend: str) -> bool:
-    if backend not in ("pallas", "interpret", "jnp"):
-        raise ValueError(f"unknown backend {backend!r}")
-    return backend == "interpret"
+    """interpret= flag for a *resolved* backend ("pallas" implies TPU)."""
+    return backend != "pallas"
+
+
+def _row_tile(b: int, tb: int) -> int:
+    """The shared pad-to-tile rule: tile rows = min(tb, ceil(b/8)*8)."""
+    return min(tb, max(8, cdiv(b, 8) * 8))
 
 
 def szp_quant(xb: jnp.ndarray, eb: float, backend: str = DEFAULT_BACKEND,
               tb: int = _sqk.DEFAULT_TB):
     """Fused QZ+LZ over (B, K) blocks -> (first, mags, signs, widths)."""
+    backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.szp_quant_blocks_ref(xb, eb)
     b = xb.shape[0]
-    tb = min(tb, b) if b % min(tb, b) == 0 else tb
+    tb = _row_tile(b, tb)
     xp = pad_to_multiple(xb, tb, axis=0)
     first, mags, signs, widths = _sqk.szp_quant_blocks(
         xp, eb, tb=tb, interpret=_interp(backend))
@@ -43,10 +78,18 @@ def szp_quant(xb: jnp.ndarray, eb: float, backend: str = DEFAULT_BACKEND,
 
 def szp_dequant(first, mags, signs, eb: float,
                 backend: str = DEFAULT_BACKEND, tb: int = _sqk.DEFAULT_TB):
-    """Inverse of szp_quant -> (B, K) float32 reconstruction."""
+    """Inverse of szp_quant -> (B, K) float32 reconstruction.
+
+    The kernel's MXU tri-matmul cumulative sum is exact only while every
+    partial delta sum stays below 2^24 (f32 integer exactness); callers
+    must guard on the measured widths and fall back to backend="jnp"
+    (int32 cumsum) past that — see core.szp._dequant_backend_for.
+    """
+    backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.szp_dequant_blocks_ref(first, mags, signs, eb)
     b = first.shape[0]
+    tb = _row_tile(b, tb)
     fp = pad_to_multiple(first, tb, axis=0)
     mp = pad_to_multiple(mags, tb, axis=0)
     sp = pad_to_multiple(signs, tb, axis=0)
@@ -55,9 +98,26 @@ def szp_dequant(first, mags, signs, eb: float,
     return out[:b]
 
 
+def local_pack(mags: jnp.ndarray, widths: jnp.ndarray, max_width: int = 32,
+               backend: str = DEFAULT_BACKEND, tb: int = _bpk.DEFAULT_TB):
+    """Tiled BE phase 1: per-block local byte pack -> (B, ceil(K*mw/8))."""
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return _ref.local_pack_ref(mags, widths, max_width)
+    b = mags.shape[0]
+    tb = _row_tile(b, tb)
+    mp = pad_to_multiple(mags, tb, axis=0)
+    wp = pad_to_multiple(widths.astype(jnp.int32), tb, axis=0,
+                         mode="constant")
+    out = _bpk.local_pack_blocks(mp, wp, max_width=max_width, tb=tb,
+                                 interpret=_interp(backend))
+    return out[:b]
+
+
 def cp_detect(field: jnp.ndarray, backend: str = DEFAULT_BACKEND,
               ty: int = _cpk.DEFAULT_TY, tx: int = _cpk.DEFAULT_TX):
     """Critical point classification -> int32 labels."""
+    backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.cp_detect_ref(field)
     return _cpk.cp_detect(field, ty=ty, tx=tx, interpret=_interp(backend))
@@ -67,6 +127,7 @@ def extrema_restore(recon, labels, cur_labels, ranks, eb: float,
                     backend: str = DEFAULT_BACKEND,
                     ty: int = _exk.DEFAULT_TY, tx: int = _exk.DEFAULT_TX):
     """Fused lost-extrema restoration -> corrected field."""
+    backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.extrema_restore_ref(recon, labels, cur_labels, ranks, eb)
     return _exk.extrema_restore(recon, labels, cur_labels, ranks, eb,
@@ -77,6 +138,7 @@ def shepard_refine(field: jnp.ndarray, sigma: float = 0.75, radius: int = 2,
                    backend: str = DEFAULT_BACKEND,
                    ty: int = _rbk.DEFAULT_TY, tx: int = _rbk.DEFAULT_TX):
     """Separable convex RBF estimate (global sigma/radius hot path)."""
+    backend = resolve_backend(backend)
     if backend == "jnp":
         return _ref.shepard_refine_global_ref(field, sigma=sigma, radius=radius)
     return _rbk.shepard_refine_global(field, sigma=sigma, radius=radius,

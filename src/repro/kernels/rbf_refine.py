@@ -8,14 +8,16 @@ is separable:  exp(-(dy^2+dx^2)/2s^2) = g(dy) g(dx),  so
   est   = S / W.
 
 Two elementwise 7-tap passes (row then column), each a single Pallas kernel
-over shifted operands — no halo DMA needed, weights are compile-time
-constants.  This is the TPU hot path; the per-point-adaptive variant stays
-on the pure-jnp path (core/rbf.py), see DESIGN.md "hardware adaptation".
+over shifted operands — no halo DMA needed.  ``sigma``/``radius`` are
+*traced* scalars: the 7 taps are computed as a tiny jnp vector and fed to
+the kernel as an operand (scalar loads), so one compiled call serves every
+parameter value and the batched decompressor can vmap per-field params.
+This is the TPU hot path; the per-point-adaptive variant stays on the
+pure-jnp path (core/rbf.py), see DESIGN.md "hardware adaptation".
 """
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -25,23 +27,21 @@ DEFAULT_TY, DEFAULT_TX = 128, 128
 MAX_RADIUS = 3
 
 
-def _taps(sigma: float, radius: int):
-    g = [math.exp(-(o * o) / (2.0 * sigma * sigma)) if abs(o) <= radius else 0.0
-         for o in range(-MAX_RADIUS, MAX_RADIUS + 1)]
-    return g
+def _taps(sigma, radius) -> jnp.ndarray:
+    """(7,) f32 Gaussian taps for offsets -3..3, zeroed past ``radius``."""
+    o = jnp.arange(-MAX_RADIUS, MAX_RADIUS + 1, dtype=jnp.float32)
+    sigma = jnp.asarray(sigma, jnp.float32)
+    g = jnp.exp(-(o * o) / (2.0 * sigma * sigma))
+    return jnp.where(jnp.abs(o) <= jnp.asarray(radius, jnp.float32), g, 0.0)
 
 
-def _make_pass_kernel(weights):
-    def kernel(*refs):
-        out_ref = refs[-1]
-        acc = None
-        for w, ref in zip(weights, refs[:-1]):
-            if w == 0.0:
-                continue
-            term = ref[...] * jnp.float32(w)
-            acc = term if acc is None else acc + term
-        out_ref[...] = acc
-    return kernel
+def _pass_kernel(taps_ref, *refs):
+    out_ref = refs[-1]
+    acc = None
+    for k, ref in enumerate(refs[:-1]):
+        term = ref[...] * taps_ref[k]
+        acc = term if acc is None else acc + term
+    out_ref[...] = acc
 
 
 def _axis_shifts(field: jnp.ndarray, axis: int):
@@ -58,8 +58,8 @@ def _axis_shifts(field: jnp.ndarray, axis: int):
     return outs
 
 
-def _run_pass(field: jnp.ndarray, weights, axis: int, ty: int, tx: int,
-              interpret: bool) -> jnp.ndarray:
+def _run_pass(field: jnp.ndarray, taps: jnp.ndarray, axis: int, ty: int,
+              tx: int, interpret: bool) -> jnp.ndarray:
     ny, nx = field.shape
     py, px = (-ny) % ty, (-nx) % tx
     shifts = [jnp.pad(s, ((0, py), (0, px)), mode="edge")
@@ -67,27 +67,25 @@ def _run_pass(field: jnp.ndarray, weights, axis: int, ty: int, tx: int,
     gy, gx = shifts[0].shape[0] // ty, shifts[0].shape[1] // tx
     spec = pl.BlockSpec((ty, tx), lambda i, j: (i, j))
     out = pl.pallas_call(
-        _make_pass_kernel(weights),
+        _pass_kernel,
         grid=(gy, gx),
-        in_specs=[spec] * len(shifts),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] + [spec] * len(shifts),
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(shifts[0].shape, jnp.float32),
         interpret=interpret,
-    )(*shifts)
+    )(taps, *shifts)
     return out[:ny, :nx]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("sigma", "radius", "ty", "tx", "interpret"))
-def shepard_refine_global(field: jnp.ndarray, sigma: float = 0.75,
-                          radius: int = 2, ty: int = DEFAULT_TY,
-                          tx: int = DEFAULT_TX,
+@functools.partial(jax.jit, static_argnames=("ty", "tx", "interpret"))
+def shepard_refine_global(field: jnp.ndarray, sigma=0.75, radius=2,
+                          ty: int = DEFAULT_TY, tx: int = DEFAULT_TX,
                           interpret: bool = True) -> jnp.ndarray:
     """Separable convex RBF estimate of every point (center excluded)."""
     f = field.astype(jnp.float32)
     g = _taps(sigma, radius)
     row = _run_pass(f, g, axis=1, ty=ty, tx=tx, interpret=interpret)
     col = _run_pass(row, g, axis=0, ty=ty, tx=tx, interpret=interpret)
-    wsum = sum(g)
-    denom = wsum * wsum - 1.0          # total weight minus the center (g0=1)
-    return (col - f) / jnp.float32(max(denom, 1e-30))
+    wsum = g.sum()
+    denom = jnp.maximum(wsum * wsum - 1.0, 1e-30)  # minus the center (g0=1)
+    return (col - f) / denom

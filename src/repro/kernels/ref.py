@@ -34,6 +34,13 @@ def szp_dequant_blocks_ref(first, mags, signs, eb: float):
     return dequantize(codes, eb)
 
 
+def local_pack_ref(mags: jnp.ndarray, widths: jnp.ndarray,
+                   max_width: int = 32) -> jnp.ndarray:
+    """Oracle for kernels.bitpack_pack.local_pack_blocks."""
+    from repro.core.bitpack import local_pack_bytes
+    return local_pack_bytes(mags, widths, max_width)
+
+
 def cp_detect_ref(field: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.cp_detect.cp_detect (== core classify)."""
     return _classify(field)
@@ -55,19 +62,22 @@ def extrema_restore_ref(recon, labels, cur_labels, ranks, eb: float):
     return jnp.where(ok_max, tgt_max, out)
 
 
-def shepard_refine_global_ref(field: jnp.ndarray, sigma: float = 0.75,
-                              radius: int = 2) -> jnp.ndarray:
+def shepard_refine_global_ref(field: jnp.ndarray, sigma=0.75,
+                              radius=2) -> jnp.ndarray:
     """Oracle for kernels.rbf_refine.shepard_refine_global.
 
-    Full (non-separable) 7x7 window with fixed sigma/Chebyshev radius,
-    center excluded, edge-replicated — the direct form of eq. (2).
+    Full (non-separable) 7x7 window with global sigma/Chebyshev radius
+    (traced scalars, like the kernel), center excluded, edge-replicated —
+    the direct form of eq. (2).
     """
     from repro.core.rbf import MAX_RADIUS, _offsets, _window_patches
     f = field.astype(jnp.float32)
+    sigma = jnp.asarray(sigma, jnp.float32)
     patches = _window_patches(f, MAX_RADIUS)
     dy, dx = _offsets(MAX_RADIUS)
     dist2 = (dy ** 2 + dx ** 2).astype(jnp.float32)
     w = jnp.exp(-dist2 / (2.0 * sigma * sigma))
-    keep = (jnp.maximum(jnp.abs(dy), jnp.abs(dx)) <= radius) & (dist2 > 0)
+    keep = ((jnp.maximum(jnp.abs(dy), jnp.abs(dx))
+             <= jnp.asarray(radius, jnp.int32)) & (dist2 > 0))
     w = jnp.where(keep, w, 0.0)
     return (patches * w[None, None, :]).sum(-1) / w.sum()

@@ -45,6 +45,13 @@ def main():
     ap.add_argument("--ckpt-sync", action="store_true",
                     help="serialize+fsync on the step loop thread instead "
                          "of the async background writer")
+    ap.add_argument("--kernel-backend",
+                    choices=["auto", "pallas", "interpret", "jnp"],
+                    default=None,
+                    help="TopoSZp kernel dispatch for lossy checkpoint "
+                         "blobs (core/szp, core/toposzp): auto picks "
+                         "pallas on TPU and the jnp oracle elsewhere; "
+                         "unset defers to cfg.kernel_backend")
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--rel-eb", type=float, default=1e-4)
     ap.add_argument("--topo-frac", type=float, default=None,
@@ -97,7 +104,9 @@ def main():
             mode=args.ckpt_mode if args.ckpt_mode is not None
             else cfg.ckpt_mode,
             eb=args.ckpt_eb if args.ckpt_eb is not None else cfg.ckpt_eb,
-            async_write=cfg.ckpt_async and not args.ckpt_sync)
+            async_write=cfg.ckpt_async and not args.ckpt_sync,
+            kernel_backend=args.kernel_backend if args.kernel_backend
+            is not None else cfg.kernel_backend)
 
     ctx = mesh if mesh is not None else _nullcontext()
     with ctx:

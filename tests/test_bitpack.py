@@ -111,6 +111,64 @@ def test_pack_blocks_static_width_cap(max_width):
     assert np.array_equal(np.asarray(out), mags)
 
 
+@pytest.mark.parametrize("k", [8, 31, 32])
+@pytest.mark.parametrize("max_width", [1, 2, 4, 8, 16, 32])
+def test_tiled_pack_equals_worstcase_prefix(k, max_width):
+    """pack_blocks_tiled == pack_blocks's valid prefix at every capacity
+    bucket, with the shrunk cap B*ceil(K*mw/8); roundtrip stays exact."""
+    rng = np.random.default_rng(k * max_width)
+    b = 23
+    widths = rng.integers(0, max_width + 1, b).astype(np.int32)
+    mags = np.zeros((b, k), np.uint32)
+    for i, w in enumerate(widths):
+        if w > 0:
+            mags[i] = rng.integers(0, 2 ** min(int(w), 32), k,
+                                   dtype=np.uint64)
+    full, fo, ft = bitpack.pack_blocks(jnp.asarray(mags), jnp.asarray(widths))
+    tiled, to, tt = bitpack.pack_blocks_tiled(jnp.asarray(mags),
+                                              jnp.asarray(widths),
+                                              max_width=max_width)
+    assert int(ft) == int(tt)
+    assert np.array_equal(np.asarray(fo), np.asarray(to))
+    assert tiled.shape[0] == b * ((k * max_width + 7) // 8)
+    t = int(ft)
+    assert np.array_equal(np.asarray(full)[:t], np.asarray(tiled)[:t])
+    assert np.all(np.asarray(tiled)[t:] == 0)
+    out = bitpack.unpack_blocks(tiled, jnp.asarray(widths), k)
+    assert np.array_equal(np.asarray(out), mags)
+
+
+def test_local_pack_kernel_matches_jnp():
+    """kernels/bitpack_pack.py (interpret) == bitpack.local_pack_bytes."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    for b, k, mw in [(17, 31, 8), (256, 31, 8), (100, 32, 4), (64, 16, 1),
+                     (5, 8, 32)]:
+        widths = rng.integers(0, mw + 1, b).astype(np.int32)
+        mags = np.zeros((b, k), np.uint32)
+        for i, w in enumerate(widths):
+            if w > 0:
+                mags[i] = rng.integers(0, 2 ** int(w), k, dtype=np.uint64)
+        mj, wj = jnp.asarray(mags), jnp.asarray(widths)
+        out_i = ops.local_pack(mj, wj, max_width=mw, backend="interpret")
+        out_j = ops.local_pack(mj, wj, max_width=mw, backend="jnp")
+        assert np.array_equal(np.asarray(out_i), np.asarray(out_j)), (b, k, mw)
+
+
+def test_width_bucket():
+    assert bitpack.width_bucket(0) == 1
+    assert bitpack.width_bucket(1) == 1
+    assert bitpack.width_bucket(3) == 4
+    assert bitpack.width_bucket(6) == 8
+    assert bitpack.width_bucket(9) == 16
+    assert bitpack.width_bucket(17) == 32
+    assert bitpack.width_bucket(32) == 32
+    with pytest.raises(ValueError):
+        bitpack.width_bucket(33)
+    with pytest.raises(ValueError):
+        bitpack.width_bucket(-1)
+
+
 def test_sum_width_growth_law():
     """Partial sums over h members need ceil(log2(h)) extra bits."""
     assert bitpack.sum_width(6, 1) == 6

@@ -311,6 +311,39 @@ def test_v1_eb_recorded_only_for_lossy(tmp_path):
 # spec adaptation (restore-with-resharding building block)
 # --------------------------------------------------------------------------
 
+@pytest.mark.parametrize("mode", ["szp", "toposzp"])
+def test_batched_shard_encode_decode_matches_per_shard(mode):
+    """encode_shards/decode_shards (one batched compile per leaf) are
+    byte/bit-identical to the per-shard encode_shard/decode_shard loop —
+    including toposzp rank streams trimmed to DIFFERENT block counts per
+    shard (the _stack_szp zero-block padding path)."""
+    from repro.ckpt import sharded
+    rng = np.random.default_rng(0)
+    eb = 1e-3
+    datas = []
+    for i in range(4):
+        d = rng.standard_normal((32, 48)).astype(np.float32)
+        if i == 0:
+            d[:] = np.round(d * 2) / 2    # few CPs -> short rank stream
+        datas.append(d)
+    batched = sharded.encode_shards(datas, mode, eb)
+    single = [sharded.encode_shard(d, mode, eb) for d in datas]
+    assert batched == single
+    shapes = [d.shape for d in datas]
+    out_b = sharded.decode_shards(batched, mode, np.dtype(np.float32),
+                                  shapes)
+    out_s = [sharded.decode_shard(b, mode, np.dtype(np.float32), s)
+             for b, s in zip(batched, shapes)]
+    for a, b, d in zip(out_b, out_s, datas):
+        assert np.array_equal(a, b)
+        bound = eb if mode == "szp" else 2 * eb
+        assert np.abs(a - d).max() <= bound * (1 + 1e-5)
+    # mixed shapes fall back to the per-shard loop transparently
+    mixed = datas[:2] + [rng.standard_normal((16, 48)).astype(np.float32)]
+    enc = sharded.encode_shards(mixed, mode, eb)
+    assert enc == [sharded.encode_shard(d, mode, eb) for d in mixed]
+
+
 def test_spec_json_roundtrip():
     for spec in (P(), P(None, "model"), P(("pod", "data"), None, "model"),
                  P("data")):
