@@ -1,0 +1,152 @@
+"""Continuous-batching serve benchmark (repro.serve).
+
+Runs a mixed-length request trace through three serving modes on one
+smoke-scale arch and reports, per mode:
+
+  (a) decode throughput (tokens/s) and p50/p99 step latency;
+  (b) the continuous-vs-greedy throughput ratio — the batching win the
+      continuous engine must keep (greedy = the pre-paging per-request
+      B=1 ``ServeEngine`` loop);
+  (c) resident paged-KV bytes vs the raw-cache equivalent at peak
+      occupancy (``kv_resident_ratio``) — the tiered-compression win;
+  (d) the TopoSZp page guarantees, hard-gated: every compressed page
+      field stays within 2*eb of the original and introduces zero false
+      critical points (``err_over_bound`` <= 1, ``false_critical_points``
+      == 0), and the ``kv_mode="raw"`` trace stays token-identical to
+      greedy (``mismatch_tokens`` == 0).
+
+The serve caches run in float32 (the CPU compute dtype — bf16 on CI
+runners is emulated); the trace is biased toward repeated-token prompts,
+whose KV trajectories are temporally smooth like the paper's scientific
+fields (random-token prompts are the adversarial case and two ride along
+in the trace).
+
+``--json PATH`` writes the versioned results file for
+``benchmarks/check_regression.py`` (baseline: baseline_serve.json);
+``--smoke`` shrinks the trace for CI wall-clock.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, reset_records, write_json
+from repro.models import lm, registry
+from repro.serve import ContinuousServeEngine, Request, ServeEngine
+
+EB = 0.16
+PAGE_SIZE = 8
+MAX_LEN = 128
+
+# (prompt_len, max_new_tokens, prompt kind); "rep" = repeated token
+# (temporally smooth KV), "rand" = iid random tokens (adversarial).
+TRACE = [(16, 48, "rep"), (32, 64, "rep"), (8, 56, "rand"), (48, 72, "rep"),
+         (16, 64, "rep"), (32, 48, "rep"), (8, 40, "rand"), (16, 56, "rep")]
+
+
+def make_trace(cfg, smoke: bool):
+    specs = TRACE if smoke else TRACE * 3
+    reqs = []
+    for i, (plen, new, kind) in enumerate(specs):
+        if kind == "rep":
+            toks = jnp.full((1, plen), (7 * i + 3) % cfg.vocab_size,
+                            jnp.int32)
+        else:
+            toks = jax.random.randint(jax.random.PRNGKey(100 + i),
+                                      (1, plen), 0, cfg.vocab_size)
+        reqs.append(Request(rid=i, inputs={"tokens": toks},
+                            max_new_tokens=new))
+    return reqs
+
+
+def run_greedy(cfg, params, reqs):
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN)
+    for r in reqs:                                     # compile
+        eng.generate(r.inputs, r.max_new_tokens)
+    t0 = time.perf_counter()
+    toks = {r.rid: np.asarray(eng.generate(r.inputs, r.max_new_tokens))[0]
+            for r in reqs}
+    dt = time.perf_counter() - t0
+    n = sum(len(t) for t in toks.values())
+    return toks, n / dt, dt
+
+
+def run_continuous(cfg, params, reqs, kv_mode: str, num_slots: int):
+    eng = ContinuousServeEngine(cfg, params, max_len=MAX_LEN,
+                                num_slots=num_slots, page_size=PAGE_SIZE,
+                                kv_mode=kv_mode, kv_eb=EB,
+                                verify_guarantees=(kv_mode != "raw"))
+    eng.serve(reqs)                                    # compile
+    t0 = time.perf_counter()
+    rep = eng.serve(reqs)
+    dt = time.perf_counter() - t0
+    return rep, rep.generated_tokens / dt, dt
+
+
+def kv_peak_ratio(rep):
+    """resident/raw bytes at the step with peak raw-equivalent occupancy
+    (the capacity one would otherwise provision)."""
+    peak = max(rep.kv_samples, key=lambda s: s["raw_equiv_bytes"],
+               default=None)
+    if not peak or not peak["raw_equiv_bytes"]:
+        return 1.0, 0.0
+    return (peak["resident_bytes"] / peak["raw_equiv_bytes"],
+            peak["cold_pages"] / peak["occupied_pages"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--num-slots", type=int, default=4)
+    args = ap.parse_args()
+
+    reset_records()
+    cfg = registry.get_smoke_config(args.arch).replace(
+        activation_dtype=jnp.float32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = make_trace(cfg, args.smoke)
+
+    greedy_toks, greedy_tps, greedy_dt = run_greedy(cfg, params, reqs)
+    n_tok = sum(len(t) for t in greedy_toks.values())
+    emit("serve/greedy_b1", 1e6 * greedy_dt / n_tok,
+         {"tokens_per_s": greedy_tps, "tokens": n_tok})
+
+    for kv_mode in ("raw", "szp", "toposzp"):
+        rep, tps, dt = run_continuous(cfg, params, reqs, kv_mode,
+                                      args.num_slots)
+        ratio, cold_frac = kv_peak_ratio(rep)
+        st = rep.pool_stats
+        metrics = {
+            "tokens_per_s": tps,
+            "tokens": rep.generated_tokens,
+            "steps": rep.steps,
+            "p50_step_ms": 1e3 * float(np.percentile(rep.step_times, 50)),
+            "p99_step_ms": 1e3 * float(np.percentile(rep.step_times, 99)),
+            "speedup_vs_greedy": tps / greedy_tps,
+            "kv_resident_ratio": ratio,
+            "cold_page_fraction": cold_frac,
+            "pages_compressed": st["pages_compressed"],
+        }
+        if kv_mode == "raw":
+            metrics["mismatch_tokens"] = sum(
+                int(np.sum(rep.tokens[r.rid] != greedy_toks[r.rid]))
+                for r in reqs)
+        else:
+            metrics["err_over_bound"] = st["max_abs_err"] / (2 * EB)
+            metrics["false_critical_points"] = st["false_critical_points"]
+            metrics["fields_verified"] = st["fields_verified"]
+        emit(f"serve/continuous_{kv_mode}", 1e6 * dt / rep.generated_tokens,
+             metrics)
+
+    if args.json:
+        write_json(args.json, "serve", smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,8 @@ from repro.core.critical_points import (classify, REGULAR, MINIMA, SADDLE,
 from repro.core.szp import (szp_compress, szp_decompress, szp_roundtrip,
                             SZpParts, DEFAULT_BLOCK)
 from repro.core.toposzp import (toposzp_compress, toposzp_decompress,
-                                toposzp_roundtrip, TopoSZpCompressed)
+                                toposzp_roundtrip, TopoSZpCompressed,
+                                pages_as_fields, fields_as_pages)
 from repro.core.metrics import (false_cases, false_cases_host, psnr,
                                 max_abs_error, bitrate, compression_ratio)
 
@@ -15,7 +16,7 @@ __all__ = [
     "szp_compress", "szp_decompress", "szp_roundtrip", "SZpParts",
     "DEFAULT_BLOCK",
     "toposzp_compress", "toposzp_decompress", "toposzp_roundtrip",
-    "TopoSZpCompressed",
+    "TopoSZpCompressed", "pages_as_fields", "fields_as_pages",
     "false_cases", "false_cases_host", "psnr", "max_abs_error", "bitrate",
     "compression_ratio",
 ]

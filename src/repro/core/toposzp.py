@@ -190,6 +190,31 @@ def batch_slice(comp: TopoSZpCompressed, i: int) -> TopoSZpCompressed:
     return jax.tree_util.tree_map(lambda a: a[i], comp)
 
 
+def pages_as_fields(pages: jnp.ndarray) -> jnp.ndarray:
+    """KV-page stack (N, S_page, ...feature dims) -> (N, C, S_page) f32
+    2-D field views for the batched compress APIs.
+
+    The feature dims fold into the row (y) axis and the page's sequence dim
+    becomes the x axis, so the SZp block deltas run along consecutive
+    positions of one channel — the temporally smooth direction of KV data —
+    and the CP/rank metadata sees each channel's position profile as a
+    scanline.  Inverse: :func:`fields_as_pages`.
+    """
+    if pages.ndim < 3:
+        raise ValueError(f"expected (N, S_page, ...) pages, got {pages.shape}")
+    n, s = pages.shape[0], pages.shape[1]
+    flat = pages.reshape(n, s, -1)
+    return jnp.swapaxes(flat, 1, 2).astype(jnp.float32)
+
+
+def fields_as_pages(fields: jnp.ndarray, page_shape: Sequence[int],
+                    dtype=None) -> jnp.ndarray:
+    """(N, C, S_page) field views back to (N, *page_shape) pages."""
+    n = fields.shape[0]
+    pages = jnp.swapaxes(fields, 1, 2).reshape((n,) + tuple(page_shape))
+    return pages if dtype is None else pages.astype(dtype)
+
+
 # --------------------------------------------------------------------------
 # Decompression
 # --------------------------------------------------------------------------

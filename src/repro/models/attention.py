@@ -13,10 +13,21 @@ from repro.models.common import (axis_size, dense, ninit, rms_norm, rope,
 
 
 class KVCache(NamedTuple):
+    """Decode KV cache.
+
+    Positions come in two layouts:
+      * shared: ``pos (S_cache,)``, ``next_pos ()`` — every batch row is at
+        the same decode position (the train/prefill/greedy-serve path);
+      * per-row: ``pos (B, S_cache)``, ``next_pos (B,)`` — rows advance
+        independently (continuous-batching serve, where each slot holds a
+        different request).  ``rowwise_cache`` converts shared -> per-row.
+    Masking is by absolute position in both layouts, so the attention math
+    is identical; only the write/mask indexing differs.
+    """
     k: jnp.ndarray       # (B, S_cache, Hkv, Dh)
     v: jnp.ndarray       # (B, S_cache, Hkv, Dh)
-    pos: jnp.ndarray     # (S_cache,) absolute positions (-1 = empty)
-    next_pos: jnp.ndarray  # () int32 next absolute position
+    pos: jnp.ndarray     # (S_cache,) or (B, S_cache) absolute pos (-1 = empty)
+    next_pos: jnp.ndarray  # () or (B,) int32 next absolute position
 
 
 def init_attention(key, cfg, kind: str):
@@ -133,11 +144,16 @@ def attend_decode(q, cache: KVCache, *, window: Optional[int],
     qg = q.reshape(b, 1, hkv, g, dh) * (1.0 / math.sqrt(dh))
     s = _gqa_scores(qg, cache.k, attn_cap)          # (B,Hkv,G,1,Skv)
     cur = cache.next_pos - 1                         # position of this token
+    if cache.pos.ndim == 2:                          # per-row positions
+        cur = cur[:, None]                           # (B, 1)
     valid = cache.pos >= 0
     valid &= cache.pos <= cur
     if window is not None:
         valid &= (cur - cache.pos) < window
-    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    if cache.pos.ndim == 2:
+        s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    else:
+        s = jnp.where(valid[None, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return _gqa_out(p, cache.v).reshape(b, 1, hq, dh)
 
@@ -171,11 +187,39 @@ def _cache_write(cache: KVCache, k_new, v_new) -> KVCache:
     """Append one token (B,1,Hkv,Dh) at next_pos (ring semantics)."""
     s_cache = cache.k.shape[1]
     slot = cache.next_pos % s_cache
+    if cache.next_pos.ndim == 1:                     # per-row positions
+        rows = jnp.arange(cache.k.shape[0])
+        k = cache.k.at[rows, slot].set(k_new[:, 0])
+        v = cache.v.at[rows, slot].set(v_new[:, 0])
+        pos = cache.pos.at[rows, slot].set(cache.next_pos)
+        return KVCache(k, v, pos, cache.next_pos + 1)
     k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
     pos = jax.lax.dynamic_update_slice_in_dim(
         cache.pos, cache.next_pos[None], slot, axis=0)
     return KVCache(k, v, pos, cache.next_pos + 1)
+
+
+def rowwise_cache(cache: KVCache, stacked: bool = False) -> KVCache:
+    """Shared-position cache -> per-row positions (idempotent).
+
+    ``stacked=True`` handles scanned-group caches, whose leaves carry a
+    leading (n_groups,) axis (k: (G,B,S,Hkv,Dh), pos: (G,S), next_pos (G,)).
+    """
+    batch = cache.k.shape[1 if stacked else 0]
+    if stacked:
+        if cache.pos.ndim == 3:
+            return cache
+        g = cache.pos.shape[0]
+        pos = jnp.broadcast_to(cache.pos[:, None], (g, batch)
+                               + cache.pos.shape[1:])
+        nxt = jnp.broadcast_to(cache.next_pos[:, None], (g, batch))
+    else:
+        if cache.pos.ndim == 2:
+            return cache
+        pos = jnp.broadcast_to(cache.pos[None], (batch,) + cache.pos.shape)
+        nxt = jnp.broadcast_to(cache.next_pos[None], (batch,))
+    return KVCache(cache.k, cache.v, pos, nxt)
 
 
 def _prefill_cache(cfg, kind, k, v, s: int) -> KVCache:
@@ -227,7 +271,10 @@ def apply_attention(params, x, cfg, kind: str,
 
     decode = cache is not None and s == 1
     if decode:
-        positions = jnp.full((b, 1), cache.next_pos, jnp.int32)
+        if cache.next_pos.ndim == 1:                 # per-row positions
+            positions = cache.next_pos[:, None].astype(jnp.int32)
+        else:
+            positions = jnp.full((b, 1), cache.next_pos, jnp.int32)
     else:
         positions = (jnp.arange(s, dtype=jnp.int32)[None, :]
                      + jnp.asarray(pos_offset, jnp.int32))

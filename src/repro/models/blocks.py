@@ -12,14 +12,14 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import (KVCache, apply_attention, cache_spec,
+from repro.models.attention import (apply_attention, cache_spec,
                                     init_attention, init_cache)
 from repro.models.common import rms_norm, shard
 from repro.models.ffn import apply_ffn, init_ffn
 from repro.models.moe import apply_moe, apply_moe_shard_map, init_moe
-from repro.models.rglru import (RGLRUState, apply_rglru, init_rglru,
+from repro.models.rglru import (apply_rglru, init_rglru,
                                 init_rglru_state, rglru_state_spec)
-from repro.models.rwkv6 import (RWKVState, channel_mix, init_rwkv,
+from repro.models.rwkv6 import (channel_mix, init_rwkv,
                                 init_rwkv_state, rwkv_state_spec, time_mix)
 
 

@@ -8,7 +8,7 @@ serves training (loss), prefill (build caches) and decode (one token).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,22 @@ def init_params(cfg, key) -> Dict[str, Any]:
 
 def param_count(params) -> int:
     return sum(x.size for x in jax.tree.leaves(params))
+
+
+def rowwise_caches(caches):
+    """Convert every KVCache in a (gcaches, tcaches) pair to per-row
+    positions (see attention.rowwise_cache) — the continuous-batching serve
+    layout where each batch row advances independently.  Recurrent states
+    (rwkv / RG-LRU) are already per-row and pass through unchanged."""
+    from repro.models.attention import KVCache, rowwise_cache
+    gcaches, tcaches = caches
+    is_kv = lambda x: isinstance(x, KVCache)   # noqa: E731
+    if gcaches is not None:
+        gcaches = jax.tree.map(
+            lambda c: rowwise_cache(c, stacked=True) if is_kv(c) else c,
+            gcaches, is_leaf=is_kv)
+    tcaches = [rowwise_cache(c) if is_kv(c) else c for c in tcaches]
+    return gcaches, tcaches
 
 
 def make_caches(cfg, batch: int, max_len: int, spec: bool = False):
@@ -161,12 +177,12 @@ def lm_head_weight(params, cfg):
 
 def logits_fn(params, cfg, hidden):
     """Full logits for a short (decode-size) hidden: (B, s, V)."""
-    l = dense(hidden, lm_head_weight(params, cfg)).astype(jnp.float32)
-    l = softcap(l, cfg.logit_softcap)
+    logits = dense(hidden, lm_head_weight(params, cfg)).astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
     if cfg.padded_vocab > cfg.vocab_size:
-        l = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
-                      l, -1e30)
-    return shard(l, "batch", None, "model")
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                           logits, -1e30)
+    return shard(logits, "batch", None, "model")
 
 
 # --------------------------------------------------------------------------

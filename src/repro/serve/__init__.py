@@ -1,3 +1,11 @@
-from repro.serve.engine import ServeEngine, serve_step, pad_caches
+from repro.serve.engine import (ContinuousServeEngine, ServeEngine,
+                                ServeReport, is_ring, pad_caches, serve_step)
+from repro.serve.paging import KV_MODES, PagePool, cache_kind
+from repro.serve.scheduler import Request, RequestState, Scheduler
 
-__all__ = ["ServeEngine", "serve_step", "pad_caches"]
+__all__ = [
+    "ServeEngine", "ContinuousServeEngine", "ServeReport", "serve_step",
+    "pad_caches", "is_ring",
+    "PagePool", "cache_kind", "KV_MODES",
+    "Request", "RequestState", "Scheduler",
+]

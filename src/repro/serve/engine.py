@@ -1,24 +1,40 @@
-"""Serving engine: batched prefill + greedy decode over jit'd steps.
+"""Serving engines.
 
-Prefill builds per-layer caches from a prompt batch, pads them out to
-``max_len`` slots (global layers; local layers keep their ring window),
-then the decode loop appends one token per step.  serve_step == one
-decode_step — the function the decode_* dry-run shapes lower.
+``ServeEngine`` is the greedy single-batch loop: batched prefill builds
+per-layer caches from one prompt batch, pads them to ``max_len`` slots,
+then the decode loop appends one token per step for every row until a
+fixed step budget.  serve_step == one decode_step — the function the
+decode_* dry-run shapes lower.
+
+``ContinuousServeEngine`` is the production loop: requests are admitted
+into free slots of a persistent slot-batched cache per step (B=1 prefill
+written into the slot), decoded together with per-row positions, and
+evicted the moment they finish; cold KV pages tier into error-bounded
+compressed streams (see serve/paging.py).  With ``kv_mode="raw"`` each
+request's tokens are bit-identical to the greedy engine run on that
+request alone.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import lm
 from repro.models.attention import KVCache
+from repro.serve.paging import PagePool, cache_kind
+from repro.serve.scheduler import Request, RequestState, Scheduler
 
 
 def pad_caches(caches, max_len: int):
-    """Grow every KVCache to ``max_len`` slots (rings stay window-sized)."""
+    """Grow every KVCache to ``max_len`` slots (masking by absolute
+    position keeps ring-ordered prefill content valid in the grown
+    buffer)."""
 
     def pad_kv(c):
         if not isinstance(c, KVCache):
@@ -26,7 +42,6 @@ def pad_caches(caches, max_len: int):
         s = c.k.shape[-3]
         if s >= max_len:
             return c
-        # ring caches (local layers) keep their size; only full caches grow.
         pad = max_len - s
         widths_kv = [(0, 0)] * c.k.ndim
         widths_kv[-3] = (0, pad)
@@ -44,7 +59,12 @@ def pad_caches(caches, max_len: int):
 
 
 def is_ring(cfg, kind: str) -> bool:
-    return kind == "local"
+    """True when ``kind`` layers keep a window-bounded ring KV cache under
+    ``cfg`` — decided by the config's layer-kind table (serve/paging.py's
+    ``cache_kind``), not the kind string alone: recurrent kinds carry no KV
+    at all and an attention kind is a ring only when the config gives it a
+    window."""
+    return cache_kind(cfg, kind) == "ring"
 
 
 class ServeEngine:
@@ -78,3 +98,128 @@ class ServeEngine:
 def serve_step(params, cfg, tokens, caches):
     """The decode-shape dry-run entry point (one new token, big cache)."""
     return lm.decode_step(params, cfg, tokens, caches)
+
+
+# --------------------------------------------------------------------------
+# Continuous batching
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeReport:
+    """What one ``ContinuousServeEngine.serve`` call did."""
+    tokens: Dict[int, np.ndarray]          # rid -> generated tokens
+    states: List[RequestState]
+    steps: int
+    step_times: List[float]                # wall seconds per decode step
+    kv_samples: List[Dict[str, int]]       # per-step PagePool.kv_bytes
+    pool_stats: Dict[str, float]
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(s.tokens) for s in self.states)
+
+
+@jax.jit
+def _slot_write(big, one, slot):
+    """Overwrite slot ``slot`` of the big rowwise caches with a padded
+    B=1 prefill cache (per-row positions in both)."""
+    g_big, t_big = big
+    g_one, t_one = one
+    if g_big is not None:
+        g_big = jax.tree.map(
+            lambda b, o: b.at[:, slot].set(o[:, 0].astype(b.dtype)),
+            g_big, g_one)
+    t_big = [jax.tree.map(lambda b, o: b.at[slot].set(o[0].astype(b.dtype)),
+                          bb, oo)
+             for bb, oo in zip(t_big, t_one)]
+    return g_big, t_big
+
+
+class ContinuousServeEngine:
+    """Continuous-batching greedy decode with a paged, tiered KV store.
+
+    Per step: admit waiting requests into free slots (exact-length B=1
+    prefill, written into the slot row), run ONE batched decode step over
+    all slots (per-row cache positions), evict finished requests, then
+    compress pages that went cold into the ``kv_mode`` tier.
+    """
+
+    def __init__(self, cfg, params, max_len: int = 128, num_slots: int = 4,
+                 page_size: int = 16, kv_mode: str = "raw",
+                 kv_eb: float = 0.04, cold_after: int = 1,
+                 kernel_backend: Optional[str] = None,
+                 verify_guarantees: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.num_slots = num_slots
+        self.pool = PagePool(cfg, num_slots, max_len, page_size,
+                             kv_mode=kv_mode, eb=kv_eb,
+                             cold_after=cold_after, backend=kernel_backend,
+                             verify=verify_guarantees)
+        self._prefill = jax.jit(partial(lm.prefill, cfg=cfg))
+        self._decode = jax.jit(partial(lm.decode_step, cfg=cfg))
+
+    def _init_caches(self):
+        caches = lm.make_caches(self.cfg, self.num_slots, self.max_len)
+        return lm.rowwise_caches(pad_caches(caches, self.max_len))
+
+    def _admit(self, st: RequestState, caches):
+        """Prefill one request and write it into its slot."""
+        logits, one = self._prefill(self.params, batch=st.req.inputs)
+        st.tokens.append(int(jnp.argmax(logits[:, -1, :], axis=-1)[0]))
+        one = lm.rowwise_caches(pad_caches(one, self.max_len))
+        return _slot_write(caches, one, jnp.int32(st.slot))
+
+    def serve(self, requests: List[Request]) -> ServeReport:
+        """Run every request to completion; returns tokens + step stats."""
+        sched = Scheduler(self.num_slots)
+        for r in requests:
+            if r.prompt_len(self.cfg) + r.max_new_tokens - 1 > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.prompt_len(self.cfg)} + "
+                    f"{r.max_new_tokens} new tokens exceeds max_len "
+                    f"{self.max_len}")
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {r.rid}: max_new_tokens < 1")
+            sched.add(r)
+
+        caches = self._init_caches()
+        step = 0
+        step_times: List[float] = []
+        kv_samples: List[Dict[str, int]] = []
+        while sched.has_work():
+            for st in sched.admit(step, lambda r: r.prompt_len(self.cfg)):
+                caches = self._admit(st, caches)
+            for st in sched.evict_finished(step):   # 1-token requests
+                self.pool.release_slot(st.slot)
+            if not sched.active:
+                step += 1
+                continue
+
+            toks = np.zeros((self.num_slots, 1), np.int32)
+            for slot, st in sched.active.items():
+                toks[slot, 0] = st.tokens[-1]
+            t0 = time.perf_counter()
+            nxt, _, caches = self._decode(self.params,
+                                          tokens=jnp.asarray(toks),
+                                          caches=caches)
+            nxt = jax.block_until_ready(nxt)
+            step_times.append(time.perf_counter() - t0)
+            nxt_host = np.asarray(nxt)
+            for st in sched.active.values():
+                st.tokens.append(int(nxt_host[st.slot, 0]))
+            for st in sched.evict_finished(step):
+                self.pool.release_slot(st.slot)
+
+            cold = self.pool.cold_pages(sched.positions())
+            caches = self.pool.compress_pages(caches, cold)
+            kv_samples.append(self.pool.kv_bytes(sched.positions()))
+            step += 1
+
+        self._caches = caches                      # exposed for tests
+        tokens = {st.req.rid: np.asarray(st.tokens, np.int32)
+                  for st in sched.finished}
+        return ServeReport(tokens=tokens, states=sched.finished, steps=step,
+                           step_times=step_times, kv_samples=kv_samples,
+                           pool_stats=dict(self.pool.stats))

@@ -1,0 +1,320 @@
+"""Paged KV allocator + tiered error-bounded page compression.
+
+The serve caches are the standard padded decode caches (every attention
+layer at ``max_len`` slots, batch dim = request slots); this module carves
+the (slot, seq) plane of the *full* (non-ring) KV layers into fixed-size
+pages and runs the tier store on top:
+
+    slot 0  | page 0 | page 1 | page 2 | ...     a page spans page_size
+    slot 1  | page 0 | page 1 | ...              positions in EVERY full
+    ...                                          KV layer (k and v)
+
+Layer kinds route by :func:`cache_kind` (the config's layer-kind table):
+
+    'global' attention  -> "full"       paged + compressible
+    'local'  attention  -> "ring"       pass-through (window-bounded)
+    'recurrent'/'rwkv'  -> "recurrent"  pass-through (O(1) state)
+
+A page becomes COLD once every position in it is ``cold_after`` decode
+steps old; cold pages are compressed in one batched SZp/TopoSZp call
+(``kv_mode``), the stream becomes the page's durable resident copy, and
+the cache region is overwritten with the stream's decompressed
+reconstruction — decompression is deterministic, so the materialized view
+is bit-identical to what an on-demand decompress of the stored stream
+returns (``fetch_page`` reads the store directly and the tests assert
+exactly that).  With ``kv_mode="toposzp"`` every decompressed page field
+keeps the paper's guarantee: |err| <= 2*eb and zero false critical points
+w.r.t. the original page's label map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.critical_points import classify
+from repro.core.guarantees import violations
+from repro.core.szp import (DEFAULT_BLOCK, szp_compress_batch,
+                            szp_decompress_batch)
+from repro.core.toposzp import (fields_as_pages, pages_as_fields,
+                                toposzp_compress_batch,
+                                toposzp_decompress_batch)
+from repro.kernels import ops
+from repro.models.attention import _window
+
+KV_MODES = ("raw", "szp", "toposzp")
+
+
+def cache_kind(cfg, kind: str) -> str:
+    """Decode-state kind of a layer under ``cfg``: "full" (paged KV),
+    "ring" (window-bounded KV, pass-through) or "recurrent" (O(1) state,
+    pass-through)."""
+    if kind in ("rwkv", "recurrent"):
+        return "recurrent"
+    if kind in ("global", "local"):
+        return "ring" if _window(cfg, kind) is not None else "full"
+    raise KeyError(f"unknown layer kind {kind!r}")
+
+
+def _kv_layer_index(cfg) -> List[Tuple[str, int, int]]:
+    """Enumerate the pageable (full-KV) layer arrays in cache order.
+
+    Entries are ("g", pattern_idx, group_idx) for scanned-group layers and
+    ("t", tail_idx, 0) for tail layers; each contributes a k and a v field
+    per page.
+    """
+    groups, tail = cfg.pattern_layers()
+    idx: List[Tuple[str, int, int]] = []
+    if groups:
+        for i, kind in enumerate(cfg.layer_pattern):
+            if cache_kind(cfg, kind) == "full":
+                for g in range(len(groups)):
+                    idx.append(("g", i, g))
+    for j, kind in enumerate(tail):
+        if cache_kind(cfg, kind) == "full":
+            idx.append(("t", j, 0))
+    return idx
+
+
+class PagePool:
+    """Slot/page bookkeeping + the compressed tier store.
+
+    The pool never owns the caches — the engine threads them through
+    :meth:`compress_pages` — it owns the page state machine (FREE -> HOT
+    -> COLD), the per-page streams, and the byte accounting.
+    """
+
+    def __init__(self, cfg, num_slots: int, max_len: int, page_size: int,
+                 kv_mode: str = "raw", eb: float = 0.04, cold_after: int = 1,
+                 backend: Optional[str] = None, block: int = DEFAULT_BLOCK,
+                 verify: bool = False, max_pages_per_call: int = 8):
+        if kv_mode not in KV_MODES:
+            raise ValueError(f"kv_mode must be one of {KV_MODES}, "
+                             f"got {kv_mode!r}")
+        if max_len % page_size != 0:
+            raise ValueError(f"max_len {max_len} not divisible by "
+                             f"page_size {page_size}")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = max_len // page_size
+        self.kv_mode = kv_mode
+        self.eb = float(eb)
+        self.cold_after = int(cold_after)
+        self.block = block
+        self.backend = ops.resolve_backend(backend)
+        self.verify = verify
+        self.max_pages_per_call = max_pages_per_call
+
+        self.layers = _kv_layer_index(cfg)
+        self.fields_per_page = 2 * len(self.layers)       # k and v each
+        h, dh = cfg.num_kv_heads, cfg.head_dim      # == init_cache's shape
+        self._page_shape = (page_size, h, dh)
+        self._field_shape = (h * dh, page_size)           # channels x pos
+        itemsize = jnp.dtype(cfg.activation_dtype).itemsize
+        self.page_raw_bytes = (self.fields_per_page
+                               * page_size * h * dh * itemsize)
+
+        # (slot, page) -> {"call": int, "offset": int, "bytes": int}
+        self._compressed: Dict[Tuple[int, int], Dict] = {}
+        self._calls: Dict[int, Dict] = {}
+        self._next_call = 0
+        self.stats = {"pages_compressed": 0, "compress_calls": 0,
+                      "max_abs_err": 0.0, "false_critical_points": 0,
+                      "fields_verified": 0}
+
+    # -- page state ---------------------------------------------------------
+
+    def occupied_pages(self, next_pos: int) -> int:
+        return min(-(-int(next_pos) // self.page_size), self.pages_per_slot)
+
+    def cold_pages(self, positions: Dict[int, int]
+                   ) -> List[Tuple[int, int]]:
+        """Pages fully ``cold_after`` steps behind the write head and not
+        yet compressed, per active slot."""
+        out = []
+        for slot, pos in positions.items():
+            full = (int(pos) - self.cold_after) // self.page_size
+            for p in range(min(full, self.pages_per_slot)):
+                if (slot, p) not in self._compressed:
+                    out.append((slot, p))
+        return out
+
+    def release_slot(self, slot: int) -> None:
+        """Free a finished request's pages and drop their streams."""
+        for key in [k for k in self._compressed if k[0] == slot]:
+            info = self._compressed.pop(key)
+            call = self._calls[info["call"]]
+            call["refs"] -= 1
+            if call["refs"] == 0:
+                del self._calls[info["call"]]
+
+    # -- byte accounting ----------------------------------------------------
+
+    def kv_bytes(self, positions: Dict[int, int]) -> Dict[str, int]:
+        """Resident paged-KV bytes: raw for HOT pages, stream bytes for
+        COLD ones; ``raw_equiv`` is what the same occupancy costs with no
+        tier store."""
+        occupied = sum(self.occupied_pages(p) for p in positions.values())
+        cold = [k for k in self._compressed if k[0] in positions]
+        stream = sum(self._compressed[k]["bytes"] for k in cold)
+        hot = occupied - len(cold)
+        return {"occupied_pages": occupied,
+                "cold_pages": len(cold),
+                "hot_raw_bytes": hot * self.page_raw_bytes,
+                "cold_stream_bytes": stream,
+                "resident_bytes": hot * self.page_raw_bytes + stream,
+                "raw_equiv_bytes": occupied * self.page_raw_bytes}
+
+    # -- gather / scatter (page-indexed cache views) ------------------------
+
+    def _layer_array(self, caches, which: str, i: int, g: int, name: str):
+        gcaches, tcaches = caches
+        c = gcaches[i] if which == "g" else tcaches[i]
+        arr = getattr(c, name)
+        return arr[g] if which == "g" else arr
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _gather(self, caches, slots, starts):
+        """Page contents -> (M * fields_per_page, C, S_page) f32 fields."""
+        ps = self.page_size
+
+        def one(arr, b, lo):
+            row = jax.lax.dynamic_index_in_dim(arr, b, 0, keepdims=False)
+            return jax.lax.dynamic_slice_in_dim(row, lo, ps, axis=0)
+
+        per_layer = []
+        for which, i, g in self.layers:
+            for name in ("k", "v"):
+                arr = self._layer_array(caches, which, i, g, name)
+                per_layer.append(jax.vmap(one, (None, 0, 0))(arr, slots,
+                                                             starts))
+        pages = jnp.stack(per_layer, axis=1)      # (M, L2, ps, H, Dh)
+        m, l2 = pages.shape[0], pages.shape[1]
+        return pages_as_fields(pages.reshape((m * l2,) + self._page_shape))
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _scatter(self, caches, fields, slots, starts):
+        """Write decompressed fields back into the page regions."""
+        m = slots.shape[0]
+        pages = fields_as_pages(fields, self._page_shape)
+        pages = pages.reshape((m, self.fields_per_page) + self._page_shape)
+        gcaches, tcaches = caches
+        gcaches = list(gcaches) if gcaches is not None else None
+        tcaches = list(tcaches)
+        li = 0
+        for which, i, g in self.layers:
+            c = gcaches[i] if which == "g" else tcaches[i]
+            upd = {}
+            for fi, name in enumerate(("k", "v")):
+                arr = getattr(c, name)
+                for j in range(m):
+                    page = pages[j, li + fi].astype(arr.dtype)
+                    at = ((g, slots[j], starts[j], 0, 0) if which == "g"
+                          else (slots[j], starts[j], 0, 0))
+                    arr = jax.lax.dynamic_update_slice(
+                        arr, page[None, None] if which == "g" else page[None],
+                        at)
+                upd[name] = arr
+            c = c._replace(**upd)
+            if which == "g":
+                gcaches[i] = c
+            else:
+                tcaches[i] = c
+            li += 2
+        gcaches = tuple(gcaches) if gcaches is not None else None
+        return gcaches, tcaches
+
+    # -- compression tier ---------------------------------------------------
+
+    def _roundtrip(self, fields):
+        """One batched compress + decompress; returns (streams, dec)."""
+        if self.kv_mode == "szp":
+            comp = szp_compress_batch(fields, self.eb, block=self.block,
+                                      backend=self.backend)
+            dec = szp_decompress_batch(comp, self._field_shape, self.eb,
+                                       block=self.block,
+                                       backend=self.backend)
+            return comp, dec, np.asarray(comp.nbytes)
+        comp = toposzp_compress_batch(fields, self.eb, block=self.block,
+                                      backend=self.backend)
+        dec = toposzp_decompress_batch(comp, self._field_shape, self.eb,
+                                       block=self.block,
+                                       backend=self.backend)
+        return comp, dec, np.asarray(comp.nbytes)
+
+    def compress_pages(self, caches, pages: List[Tuple[int, int]]):
+        """Compress ``pages`` into the tier store and materialize their
+        reconstructions in the caches.  Returns the updated caches."""
+        if self.kv_mode == "raw" or not pages:
+            return caches
+        for lo in range(0, len(pages), self.max_pages_per_call):
+            caches = self._compress_chunk(caches,
+                                          pages[lo:lo + self.max_pages_per_call])
+        return caches
+
+    def _compress_chunk(self, caches, chunk: List[Tuple[int, int]]):
+        m = len(chunk)
+        # pad to a power-of-two bucket (duplicates of the last page) so the
+        # compiled batch shapes come from a small static set
+        bucket = 1
+        while bucket < m:
+            bucket *= 2
+        padded = chunk + [chunk[-1]] * (bucket - m)
+        slots = jnp.asarray([s for s, _ in padded], jnp.int32)
+        starts = jnp.asarray([p * self.page_size for _, p in padded],
+                             jnp.int32)
+        fields = self._gather(caches, slots, starts)
+        comp, dec, nbytes = self._roundtrip(fields)
+        if self.verify:
+            max_err, fp = _verify_fields(fields, dec)
+            nf = m * self.fields_per_page
+            self.stats["max_abs_err"] = max(self.stats["max_abs_err"],
+                                            float(max_err[:nf].max()))
+            self.stats["false_critical_points"] += int(fp[:nf].sum())
+            self.stats["fields_verified"] += nf
+        caches = self._scatter(caches, dec, slots, starts)
+
+        cid = self._next_call
+        self._next_call += 1
+        self._calls[cid] = {"comp": comp, "pages": list(chunk), "refs": m}
+        l2 = self.fields_per_page
+        for j, key in enumerate(chunk):
+            self._compressed[key] = {
+                "call": cid, "offset": j,
+                "bytes": int(nbytes[j * l2:(j + 1) * l2].sum())}
+        self.stats["pages_compressed"] += m
+        self.stats["compress_calls"] += 1
+        return caches
+
+    def fetch_page(self, slot: int, page: int) -> jnp.ndarray:
+        """Decompress one page from the tier store (on-demand read path):
+        -> (fields_per_page, S_page, Hkv, Dh) f32, bit-identical to the
+        reconstruction materialized in the caches at compress time."""
+        info = self._compressed[(slot, page)]
+        comp = self._calls[info["call"]]["comp"]
+        if self.kv_mode == "szp":
+            dec = szp_decompress_batch(comp, self._field_shape, self.eb,
+                                       block=self.block,
+                                       backend=self.backend)
+        else:
+            dec = toposzp_decompress_batch(comp, self._field_shape, self.eb,
+                                           block=self.block,
+                                           backend=self.backend)
+        l2 = self.fields_per_page
+        dec = dec[info["offset"] * l2:(info["offset"] + 1) * l2]
+        return fields_as_pages(dec, self._page_shape)
+
+
+@jax.jit
+def _verify_fields(orig, dec):
+    """Per-field max error + false-critical-point count (FP or FT) of the
+    reconstruction w.r.t. the original field's label map."""
+    def one(o, d):
+        return jnp.abs(d - o).max(), violations(d, classify(o)).sum()
+    errs, fps = jax.vmap(one)(orig, dec)
+    return errs, fps

@@ -1,0 +1,101 @@
+"""Request admission/eviction for the continuous-batching engine.
+
+A ``Request`` is one prompt + generation budget; the ``Scheduler`` keeps
+the FIFO waiting queue and the slot -> ``RequestState`` map.  Admission
+fills free slots in arrival order at the top of every engine step;
+eviction frees a slot the moment its request finishes (EOS or budget),
+mid-decode — the freed slot is eligible for admission on the next step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    inputs: Dict[str, np.ndarray]     # B=1 prompt batch (see configs/base)
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+    def prompt_len(self, cfg) -> int:
+        """Number of cache positions the prompt occupies."""
+        if cfg.frontend == "audio_frames":
+            return int(self.inputs["embeds"].shape[1])
+        n = int(self.inputs["tokens"].shape[1])
+        if cfg.frontend == "vision_patches":
+            n += int(self.inputs["patch_embeds"].shape[1])
+        return n
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    slot: int
+    prompt_len: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    admit_step: int = 0
+    finish_step: int = -1
+
+    @property
+    def next_pos(self) -> int:
+        """Cache write head: prompt plus every generated-token KV written
+        so far (the latest token's KV lands during its decode step)."""
+        return self.prompt_len + max(len(self.tokens) - 1, 0)
+
+    def done(self) -> bool:
+        if len(self.tokens) >= self.req.max_new_tokens:
+            return True
+        eos = self.req.eos_id
+        return eos is not None and len(self.tokens) > 0 \
+            and self.tokens[-1] == eos
+
+
+class Scheduler:
+    """FIFO continuous-batching scheduler over a fixed slot set."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, RequestState] = {}
+        self.finished: List[RequestState] = []
+
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.active)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.num_slots) if s not in self.active]
+
+    def admit(self, step: int, prompt_len_fn) -> List[RequestState]:
+        """Move waiting requests into free slots (arrival order)."""
+        admitted = []
+        for slot in self.free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.popleft()
+            st = RequestState(req=req, slot=slot,
+                              prompt_len=prompt_len_fn(req),
+                              admit_step=step)
+            self.active[slot] = st
+            admitted.append(st)
+        return admitted
+
+    def evict_finished(self, step: int) -> List[RequestState]:
+        """Retire every active request that has hit EOS or its budget."""
+        out = []
+        for slot in [s for s, st in self.active.items() if st.done()]:
+            st = self.active.pop(slot)
+            st.finish_step = step
+            self.finished.append(st)
+            out.append(st)
+        return out
+
+    def positions(self) -> Dict[int, int]:
+        return {slot: st.next_pos for slot, st in self.active.items()}

@@ -1,0 +1,258 @@
+"""Continuous-batching serve engine: greedy parity, paged-KV tier
+guarantees, scheduler/pool bookkeeping, and the config-tied is_ring fix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm, registry
+from repro.models.attention import KVCache
+from repro.serve import (ContinuousServeEngine, PagePool, Request, Scheduler,
+                         ServeEngine, cache_kind, is_ring, pad_caches)
+
+MAX_LEN = 16
+
+
+def _smoke_cfg(arch):
+    cfg = registry.get_smoke_config(arch)
+    if cfg.num_experts:
+        # MoE capacity couples rows of a batch; with the default factor the
+        # continuous B=num_slots batch drops tokens the B=1 greedy run
+        # keeps.  Same precedent as test_models_smoke.
+        cfg = cfg.replace(capacity_factor=8.0)
+    return cfg
+
+
+def _requests(cfg, specs):
+    """One B=1 request per (prompt_len, max_new_tokens) spec."""
+    reqs = []
+    for i, (plen, new) in enumerate(specs):
+        rng = jax.random.PRNGKey(40 + i)
+        if cfg.frontend == "audio_frames":
+            inputs = {"embeds": jax.random.normal(
+                rng, (1, plen, cfg.d_model), jnp.float32)}
+        elif cfg.frontend == "vision_patches":
+            npre = cfg.num_prefix_embeds
+            inputs = {"patch_embeds": jax.random.normal(
+                          rng, (1, npre, cfg.d_model), jnp.float32),
+                      "tokens": jax.random.randint(
+                          rng, (1, max(plen - npre, 2)), 0,
+                          cfg.vocab_size)}
+        else:
+            inputs = {"tokens": jax.random.randint(rng, (1, plen), 0,
+                                                   cfg.vocab_size)}
+        reqs.append(Request(rid=i, inputs=inputs, max_new_tokens=new))
+    return reqs
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_continuous_raw_matches_greedy(arch):
+    """kv_mode="raw" must reproduce the greedy engine bit-for-bit per
+    request, across the whole registry (ring caches, recurrent states,
+    MoE, audio/vision frontends)."""
+    cfg = _smoke_cfg(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _requests(cfg, [(6, 5), (9, 4), (6, 3)])
+
+    eng = ContinuousServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2,
+                                page_size=8, kv_mode="raw")
+    rep = eng.serve(reqs)
+    greedy = ServeEngine(cfg, params, max_len=MAX_LEN)
+    for r in reqs:
+        want = np.asarray(greedy.generate(r.inputs, r.max_new_tokens))[0]
+        got = rep.tokens[r.rid]
+        np.testing.assert_array_equal(got, want, err_msg=f"rid {r.rid}")
+    assert rep.generated_tokens == sum(n for _, n in [(6, 5), (9, 4), (6, 3)])
+
+
+def test_eos_evicts_early():
+    """A request hitting its eos id frees the slot mid-decode and keeps
+    the greedy token prefix."""
+    cfg = _smoke_cfg("gemma2_2b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    [req] = _requests(cfg, [(6, 8)])
+    greedy = np.asarray(ServeEngine(cfg, params, max_len=MAX_LEN)
+                        .generate(req.inputs, 8))[0]
+    eos = int(greedy[3])
+    req = Request(rid=0, inputs=req.inputs, max_new_tokens=8, eos_id=eos)
+    eng = ContinuousServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2,
+                                page_size=8, kv_mode="raw")
+    rep = eng.serve([req])
+    got = rep.tokens[0]
+    stop = int(np.argmax(greedy == eos))
+    np.testing.assert_array_equal(got, greedy[:stop + 1])
+    assert got[-1] == eos
+
+
+def test_toposzp_pages_keep_guarantees():
+    """Every page the tier compresses stays within 2*eb with zero false
+    critical points, and bytes go down at peak occupancy."""
+    cfg = _smoke_cfg("gemma2_2b").replace(activation_dtype=jnp.float32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = [Request(rid=i, inputs={"tokens": jnp.full((1, 8), 3 + i,
+                                                      jnp.int32)},
+                    max_new_tokens=20) for i in range(3)]
+    eng = ContinuousServeEngine(cfg, params, max_len=32, num_slots=2,
+                                page_size=8, kv_mode="toposzp", kv_eb=0.16,
+                                verify_guarantees=True)
+    rep = eng.serve(reqs)
+    st = rep.pool_stats
+    assert st["pages_compressed"] > 0
+    assert st["fields_verified"] > 0
+    assert st["max_abs_err"] <= 2 * 0.16
+    assert st["false_critical_points"] == 0
+    peak = max(rep.kv_samples, key=lambda s: s["raw_equiv_bytes"])
+    assert peak["cold_pages"] > 0
+    assert peak["resident_bytes"] < peak["raw_equiv_bytes"]
+
+
+def _filled_pool_caches(cfg, pool, num_slots, max_len):
+    """Rowwise serve caches with seeded random KV contents."""
+    caches = lm.rowwise_caches(
+        pad_caches(lm.make_caches(cfg, num_slots, max_len), max_len))
+
+    def fill(path_i, c):
+        if not isinstance(c, KVCache):
+            return c
+        kk = jax.random.normal(jax.random.PRNGKey(path_i[0]), c.k.shape,
+                               jnp.float32).astype(c.k.dtype)
+        vv = jax.random.normal(jax.random.PRNGKey(path_i[0] + 100),
+                               c.v.shape, jnp.float32).astype(c.v.dtype)
+        return c._replace(k=kk, v=vv)
+
+    gcaches, tcaches = caches
+    if gcaches is not None:
+        gcaches = tuple(fill((i,), c) for i, c in enumerate(gcaches))
+    tcaches = [fill((50 + j,), c) for j, c in enumerate(tcaches)]
+    return gcaches, tcaches
+
+
+def test_pagepool_fetch_matches_materialized():
+    """fetch_page (the on-demand store read) is bit-identical to the
+    reconstruction compress_pages materialized into the caches, and
+    release_slot drops streams with refcounting."""
+    cfg = _smoke_cfg("gemma2_2b").replace(activation_dtype=jnp.float32)
+    pool = PagePool(cfg, num_slots=2, max_len=32, page_size=8,
+                    kv_mode="toposzp", eb=0.1, verify=True)
+    caches = _filled_pool_caches(cfg, pool, 2, 32)
+    orig = caches
+    pages = [(0, 0), (0, 1), (1, 0)]
+    caches = pool.compress_pages(caches, pages)
+
+    for slot, page in pages:
+        fetched = np.asarray(pool.fetch_page(slot, page))
+        lo = page * pool.page_size
+        li = 0
+        for which, i, g in pool.layers:
+            for fi, name in enumerate(("k", "v")):
+                arr = pool._layer_array(caches, which, i, g, name)
+                region = np.asarray(arr[slot, lo:lo + pool.page_size],
+                                    np.float32)
+                np.testing.assert_array_equal(fetched[li + fi], region)
+                before = np.asarray(
+                    pool._layer_array(orig, which, i, g, name)
+                    [slot, lo:lo + pool.page_size], np.float32)
+                assert np.abs(region - before).max() <= 2 * 0.1 + 1e-6
+            li += 2
+    assert pool.stats["false_critical_points"] == 0
+    assert pool.stats["fields_verified"] == 3 * pool.fields_per_page
+
+    acct = pool.kv_bytes({0: 32, 1: 16})
+    assert acct["occupied_pages"] == 6 and acct["cold_pages"] == 3
+    assert acct["resident_bytes"] < acct["raw_equiv_bytes"]
+
+    pool.release_slot(0)
+    assert (1, 0) in pool._compressed and (0, 0) not in pool._compressed
+    pool.fetch_page(1, 0)                       # shared call still alive
+    pool.release_slot(1)
+    assert not pool._compressed and not pool._calls
+
+
+def test_pagepool_cold_page_state():
+    cfg = _smoke_cfg("gemma2_2b")
+    pool = PagePool(cfg, num_slots=2, max_len=32, page_size=8,
+                    kv_mode="szp", cold_after=2)
+    # write head at 19: pages 0,1 fully >= 2 steps behind; page 2 partial
+    assert pool.cold_pages({0: 19}) == [(0, 0), (0, 1)]
+    assert pool.occupied_pages(19) == 3
+    pool._compressed[(0, 0)] = {"call": 0, "offset": 0, "bytes": 1}
+    pool._calls[0] = {"comp": None, "pages": [(0, 0)], "refs": 1}
+    assert pool.cold_pages({0: 19}) == [(0, 1)]
+    with pytest.raises(ValueError):
+        PagePool(cfg, 2, 30, 8)                 # max_len % page_size != 0
+    with pytest.raises(ValueError):
+        PagePool(cfg, 2, 32, 8, kv_mode="zip")
+
+
+def test_scheduler_fifo_and_eviction():
+    sched = Scheduler(num_slots=2)
+    reqs = [Request(rid=i, inputs={}, max_new_tokens=2 + i)
+            for i in range(4)]
+    for r in reqs:
+        sched.add(r)
+    admitted = sched.admit(0, lambda r: 4)
+    assert [st.req.rid for st in admitted] == [0, 1]
+    assert sched.free_slots() == [] and len(sched.waiting) == 2
+    sched.active[0].tokens.extend([7, 7])       # rid 0 hits its budget
+    done = sched.evict_finished(3)
+    assert [st.req.rid for st in done] == [0]
+    assert done[0].finish_step == 3
+    assert sched.free_slots() == [0]
+    admitted = sched.admit(4, lambda r: 4)      # FIFO: rid 2 takes slot 0
+    assert [st.req.rid for st in admitted] == [2]
+    assert sched.positions() == {0: 4, 1: 4}    # pre-first-token heads
+    assert sched.has_work()
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_is_ring_matches_cache_shapes(arch):
+    """is_ring/cache_kind agree with the caches make_caches actually
+    builds, for every layer kind of every registered arch."""
+    cfg = registry.get_smoke_config(arch)
+    gcaches, tcaches = lm.make_caches(cfg, 1, 64)
+    groups, tail = cfg.pattern_layers()
+
+    def check(kind, cache):
+        if isinstance(cache, KVCache):
+            ring = cache.k.shape[-3] < 64
+            assert is_ring(cfg, kind) == ring, (arch, kind)
+            assert cache_kind(cfg, kind) == ("ring" if ring else "full")
+        else:
+            assert cache_kind(cfg, kind) == "recurrent", (arch, kind)
+            assert not is_ring(cfg, kind)
+
+    if groups:
+        for i, kind in enumerate(cfg.layer_pattern):
+            check(kind, gcaches[i])
+    for j, kind in enumerate(tail):
+        check(kind, tcaches[j])
+
+
+def test_is_ring_follows_config_not_kind_string():
+    """The old is_ring ignored cfg; a 'local' layer with no window under
+    the config must report as a full cache."""
+    cfg = registry.get_smoke_config("gemma2_2b")
+    assert is_ring(cfg, "local")
+    assert not is_ring(cfg.replace(window_size=None), "local")
+    with pytest.raises(KeyError):
+        cache_kind(cfg, "hyena")
+
+
+def test_rowwise_cache_parity_and_idempotence():
+    """Per-row positions change nothing about the decode math: shared- and
+    rowwise-cache decode logits agree bitwise."""
+    cfg = _smoke_cfg("gemma2_2b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                              cfg.vocab_size)
+    _, caches = lm.prefill(params, cfg, {"tokens": toks})
+    shared = pad_caches(caches, MAX_LEN)
+    rowwise = lm.rowwise_caches(shared)
+    assert jax.tree.all(jax.tree.map(
+        jnp.array_equal, lm.rowwise_caches(rowwise), rowwise))
+
+    tok_s = tok_r = jnp.full((2, 1), 3, jnp.int32)
+    for _ in range(3):
+        tok_s, log_s, shared = lm.decode_step(params, cfg, tok_s, shared)
+        tok_r, log_r, rowwise = lm.decode_step(params, cfg, tok_r, rowwise)
+        np.testing.assert_array_equal(np.asarray(log_s), np.asarray(log_r))
