@@ -214,10 +214,14 @@ def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
     offset = 0
     with open(os.path.join(tmp, fname), "wb") as f:
         for snap in snaps:
-            emode = sharded.leaf_mode(snap, mode, min_lossy)
             shard_docs = []
-            blobs = sharded.encode_shards([sh.data for sh in snap.shards],
-                                          emode, eb, backend=backend)
+            if snap.blobs is not None:     # encoded on device at snapshot
+                emode, blobs = snap.emode, snap.blobs
+            else:
+                emode = sharded.leaf_mode(snap, mode, min_lossy)
+                blobs = sharded.encode_shards(
+                    [sh.data for sh in snap.shards], emode, eb,
+                    backend=backend)
             for sh, blob in zip(snap.shards, blobs):
                 f.write(blob)
                 shard_docs.append({
@@ -345,7 +349,9 @@ class CheckpointManager:
                 "CheckpointManager.save is single-controller for now: "
                 "multi-process commit coordination (shared-dir barrier + "
                 "manifest merge on process 0) is not implemented")
-        snaps, mesh_shape, _ = sharded.snapshot_tree(tree)
+        snaps, mesh_shape, _ = sharded.snapshot_tree(
+            tree, mode=self.mode, eb=self.eb, backend=self.kernel_backend,
+            min_lossy=self.min_compress_size)
         fn = functools.partial(_write_v2, self.directory, step, snaps,
                                mesh_shape, self.mode, self.eb,
                                self.min_compress_size, self.keep, self.log,

@@ -56,7 +56,7 @@ def flatten_with_names(tree) -> Tuple[List[str], List[Any], Any]:
 
 class ShardSnap(NamedTuple):
     index: Tuple[Tuple[int, int], ...]   # [start, stop) per dim
-    data: np.ndarray                     # host copy
+    data: Optional[np.ndarray]           # host copy (None when pre-encoded)
 
 
 class LeafSnap(NamedTuple):
@@ -65,6 +65,11 @@ class LeafSnap(NamedTuple):
     dtype: str
     spec: Optional[list]                 # spec_to_json form, None if unsharded
     shards: List[ShardSnap]
+    # Device-side encode (snapshot_tree(mode=lossy)): the shards' raw host
+    # copies are skipped and the serialized streams travel instead — the
+    # device->host copy happens AFTER compression, on the packed bytes.
+    emode: str = "raw"
+    blobs: Optional[List[bytes]] = None
 
 
 def _normalize_index(index, shape) -> Tuple[Tuple[int, int], ...]:
@@ -77,14 +82,23 @@ def _normalize_index(index, shape) -> Tuple[Tuple[int, int], ...]:
     return tuple(out)
 
 
-def snapshot_tree(tree) -> Tuple[List[LeafSnap], Optional[Dict[str, int]],
-                                 Any]:
+def snapshot_tree(tree, mode: str = "raw", eb: float = 0.0,
+                  backend: Optional[str] = None,
+                  min_lossy: int = DEFAULT_MIN_LOSSY,
+                  ) -> Tuple[List[LeafSnap], Optional[Dict[str, int]], Any]:
     """Device -> host snapshot of this process's addressable shards.
 
     Returns (leaf snapshots, mesh {axis: size} or None, treedef).  This is
     the only part of a save that must run synchronously: once the host
     copies exist the step loop may donate/overwrite the device buffers
     while the background writer serializes (double-buffer semantics).
+
+    With a lossy ``mode``, eligible float32 leaves (every shard clearing
+    ``min_lossy``, all shards the same shape) are compressed ON DEVICE
+    before the copy: the device->host transfer is of the packed stream,
+    not the raw leaf, and the snapshot carries the serialized blobs
+    (``LeafSnap.blobs``) so the background writer skips its own encode.
+    Ineligible leaves fall back to the raw host copy exactly as before.
     """
     names, leaves, treedef = flatten_with_names(tree)
     snaps: List[LeafSnap] = []
@@ -93,16 +107,31 @@ def snapshot_tree(tree) -> Tuple[List[LeafSnap], Optional[Dict[str, int]],
         sharding = getattr(leaf, "sharding", None)
         if isinstance(sharding, NamedSharding):
             mesh_shape = mesh_shape_dict(sharding.mesh)
-            shards = [ShardSnap(_normalize_index(s.index, leaf.shape),
-                                np.asarray(s.data))
-                      for s in leaf.addressable_shards if s.replica_id == 0]
-            snaps.append(LeafSnap(name, tuple(leaf.shape), str(leaf.dtype),
-                                  spec_to_json(sharding.spec), shards))
+            spec = spec_to_json(sharding.spec)
+            dev = [(_normalize_index(s.index, leaf.shape), s.data)
+                   for s in leaf.addressable_shards if s.replica_id == 0]
+        elif isinstance(leaf, jax.Array):
+            spec = None
+            dev = [(tuple((0, d) for d in leaf.shape), leaf)]
         else:
             arr = np.asarray(leaf)
             full = tuple((0, d) for d in arr.shape)
             snaps.append(LeafSnap(name, arr.shape, str(arr.dtype), None,
                                   [ShardSnap(full, arr)]))
+            continue
+        shape, dtype = tuple(leaf.shape), str(leaf.dtype)
+        if (mode in mf.LOSSY_MODES and dtype == "float32" and dev
+                and all(d.size >= min_lossy for _, d in dev)
+                and len({d.shape for _, d in dev}) == 1):
+            blobs = encode_shards_device([d for _, d in dev], mode, eb,
+                                         backend=backend)
+            snaps.append(LeafSnap(name, shape, dtype, spec,
+                                  [ShardSnap(idx, None) for idx, _ in dev],
+                                  emode=mode, blobs=blobs))
+        else:
+            snaps.append(LeafSnap(name, shape, dtype, spec,
+                                  [ShardSnap(idx, np.asarray(d))
+                                   for idx, d in dev]))
     return snaps, mesh_shape, treedef
 
 
@@ -161,6 +190,35 @@ def encode_shards(datas: List[np.ndarray], mode: str, eb: float,
             for i in range(len(datas))]
     if mode == "toposzp":
         comp = toposzp_compress_batch(stack, eb, backend=backend)
+        return [cio.serialize_toposzp(batch_slice(comp, i), f2d, eb)
+                for i in range(len(datas))]
+    raise ValueError(f"unknown checkpoint mode {mode!r}")
+
+
+def encode_shards_device(datas: List[jnp.ndarray], mode: str, eb: float,
+                         backend: Optional[str] = None) -> List[bytes]:
+    """Batched on-device encode of one leaf's same-shape device shards.
+
+    The compressors run where the data lives; the only device->host
+    transfer is ``jax.device_get`` of the packed streams, so the raw leaf
+    never crosses the link.  Byte-identical to the host-side
+    :func:`encode_shards` path."""
+    f2d = _field2d(tuple(datas[0].shape))
+    # Shards of a sharded leaf live on different devices; gather them onto
+    # one (a device-to-device copy — the bytes still never touch the host)
+    # so the batched compressor sees a single stacked array.
+    dev0 = next(iter(datas[0].devices()), None)
+    stack = jnp.stack([jnp.reshape(jax.device_put(d, dev0).astype(
+        jnp.float32), f2d) for d in datas])
+    if mode == "szp":
+        parts = jax.device_get(szp_compress_batch(stack, eb,
+                                                  backend=backend))
+        return [cio.serialize_szp(
+            jax.tree_util.tree_map(lambda a: a[i], parts), f2d, eb)
+            for i in range(len(datas))]
+    if mode == "toposzp":
+        comp = jax.device_get(toposzp_compress_batch(stack, eb,
+                                                     backend=backend))
         return [cio.serialize_toposzp(batch_slice(comp, i), f2d, eb)
                 for i in range(len(datas))]
     raise ValueError(f"unknown checkpoint mode {mode!r}")

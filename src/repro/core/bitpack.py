@@ -29,8 +29,12 @@ MAX_WIDTH = 32
 
 
 def block_nbytes(widths: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Per-block packed byte count for K values at widths bits each."""
-    return (k * widths + 7) // 8
+    """Per-block packed byte count for K values at widths bits each.
+
+    Widths arrive as the serialized uint8 stream as often as not; the
+    product ``k * width`` tops out at 31 * 32 and must not wrap in the
+    stream dtype, so compute in int32."""
+    return (k * widths.astype(jnp.int32) + 7) // 8
 
 
 def sum_width(width: int, n_summands: int) -> int:

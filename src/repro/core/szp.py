@@ -22,7 +22,9 @@ and for the lossless integer mode (the TopoSZp rank metadata).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import warnings
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -89,8 +91,8 @@ def _assemble_parts(first, mags, signs, widths, max_width: int,
     else:
         local = ops.local_pack(mags, widths, max_width=max_width,
                                backend=backend)
-        payload, _, total = bitpack.compact_local_bytes(local, widths,
-                                                        mags.shape[1])
+        payload, _, total = ops.compact_bytes(local, widths, mags.shape[1],
+                                              backend=backend)
     const_bits = bitpack.pack_bits((widths == 0).astype(jnp.uint8))
     signs_full = jnp.concatenate(
         [jnp.zeros((nblocks, 1), jnp.int32), signs], axis=1)
@@ -154,13 +156,104 @@ def _pack_stage(first, mags, signs, widths, max_width: int,
                            backend=backend)
 
 
-def szp_compress(x: jnp.ndarray, eb: float, block: int = DEFAULT_BLOCK,
-                 backend: Optional[str] = None) -> SZpParts:
+def _bucket_index(w_max: jnp.ndarray) -> jnp.ndarray:
+    """Device-side :func:`bitpack.width_bucket`: index into WIDTH_BUCKETS."""
+    edges = jnp.asarray(bitpack.WIDTH_BUCKETS[:-1], jnp.int32)
+    return (w_max.astype(jnp.int32) > edges).sum()
+
+
+def _worst_payload_cap(nblocks: int, block: int) -> int:
+    """Static payload capacity shared by every ``lax.switch`` branch."""
+    return nblocks * (((block - 1) * bitpack.MAX_WIDTH + 7) // 8)
+
+
+def _pack_switch(streams, block: int, backend: str,
+                 batched: bool = False):
+    """On-device bucket select + BE pack of one or more delta streams.
+
+    ``streams`` is a tuple of ``(first, mags, signs, widths)`` tuples; all
+    of them are packed at the SHARED bucket of the global max width (one
+    ``lax.switch`` branch per static WIDTH_BUCKETS capacity instead of a
+    branch per bucket combination).  Every branch zero-pads its payloads to
+    the worst-case capacity so the branch avals match; the valid prefix
+    and all byte counts are untouched, so serialized streams stay
+    bit-identical to the host-bucketed two-pass pack.  Returns a tuple of
+    SZpParts, one per stream."""
+    bdim = 1 if batched else 0
+    caps = [_worst_payload_cap(s[0].shape[bdim], block) for s in streams]
+
+    def branch(mw):
+        def pack_one(args, cap):
+            if batched:
+                parts = jax.vmap(lambda f, m, s, w: _assemble_parts(
+                    f, m, s, w, mw, backend=backend))(*args)
+                pad = ((0, 0), (0, cap - parts.payload.shape[1]))
+            else:
+                parts = _assemble_parts(*args, mw, backend=backend)
+                pad = (0, cap - parts.payload.shape[0])
+            return parts._replace(payload=jnp.pad(parts.payload, pad))
+
+        def fn(streams):
+            return tuple(pack_one(s, c) for s, c in zip(streams, caps))
+        return fn
+
+    w_max = functools.reduce(jnp.maximum,
+                             [s[3].max() for s in streams]).astype(jnp.int32)
+    bidx = _bucket_index(w_max)
+    return jax.lax.switch(bidx, [branch(m) for m in bitpack.WIDTH_BUCKETS],
+                          tuple(streams))
+
+
+def _compress_resident(x: jnp.ndarray, eb, block: int,
+                       backend: str) -> SZpParts:
+    """Device-resident compress: quant + bucket select + pack, no host."""
+    xb = _blocked_field(x, block)
+    first, mags, signs, widths = ops.szp_quant(xb, eb, backend=backend)
+    (parts,) = _pack_switch(((first, mags, signs, widths),), block, backend)
+    return parts
+
+
+_compress_resident_jit = jax.jit(
+    _compress_resident, static_argnames=("block", "backend"))
+_compress_resident_donated = jax.jit(
+    _compress_resident, static_argnames=("block", "backend"),
+    donate_argnums=(0,))
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Donation is best-effort: no compress output matches the input's
+    f32 aval, so backends that only reuse donated buffers via exact
+    aliasing (CPU) warn and keep the input alive.  The flag still frees
+    the buffer where the allocator supports it (TPU)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+
+def szp_compress(x: jnp.ndarray, eb, block: int = DEFAULT_BLOCK,
+                 backend: Optional[str] = None, resident: bool = False,
+                 donate: bool = False) -> SZpParts:
     """Full SZp compression of a float field (any shape; flattened
-    row-major).  Stream bytes are bit-identical across backends; the one
-    host sync reads the measured max width for the static capacity bucket.
+    row-major).  Stream bytes are bit-identical across backends and modes.
+
+    ``resident=False`` (default) keeps the two-pass pack: one host sync
+    reads the measured max width and the payload capacity is the measured
+    WIDTH_BUCKETS bucket (smallest buffer).  ``resident=True`` runs the
+    whole compress as device-only computation (``lax.switch`` over the
+    static buckets) and is safe to call inside an enclosing ``jax.jit`` —
+    the payload is padded to the worst-case capacity but every byte count
+    and the valid prefix are identical.  ``donate=True`` (resident only)
+    donates ``x``'s buffer to the computation.
     """
     backend = ops.resolve_backend(backend)
+    if resident:
+        if donate:
+            with _quiet_donation():
+                return _compress_resident_donated(x, eb, block=block,
+                                                  backend=backend)
+        return _compress_resident_jit(x, eb, block=block, backend=backend)
     first, mags, signs, widths, w_max = _quant_stage(x, eb, block, backend)
     mw = bitpack.width_bucket(int(w_max))
     return _pack_stage(first, mags, signs, widths, mw, backend)
@@ -181,21 +274,54 @@ def _dequant_stage(parts: SZpParts, n: int, eb: float, block: int,
     return out.reshape(-1)[:n]
 
 
-def szp_decompress(parts: SZpParts, shape: Sequence[int], eb: float,
+def tri_guard_width(block: int) -> int:
+    """Smallest block width whose deltas can overflow the 2^24 tri-matmul
+    exactness limit — the static threshold of the device-side dequant
+    guard (``w_max >= tri_guard_width(block)`` <=> the host-side
+    :func:`_dequant_backend_for` check)."""
+    for w in range(bitpack.MAX_WIDTH + 1):
+        if (block - 1) * ((1 << min(w, 31)) - 1) >= TRI_DEQUANT_EXACT:
+            return w
+    return bitpack.MAX_WIDTH + 1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block", "recon", "backend"))
+def _dequant_guarded(parts: SZpParts, n: int, eb, block: int,
+                     recon: str, backend: str) -> jnp.ndarray:
+    """Dequant behind the in-graph 2^24 guard: a ``lax.cond`` on the
+    device-computed max width picks the exact int32-cumsum path when the
+    tri-matmul could lose integer exactness — no host sync."""
+    if backend == "jnp":
+        return _dequant_stage(parts, n, eb, block, recon, "jnp")
+    overflow = parts.widths.astype(jnp.int32).max() >= tri_guard_width(block)
+    return jax.lax.cond(
+        overflow,
+        lambda p: _dequant_stage(p, n, eb, block, recon, "jnp"),
+        lambda p: _dequant_stage(p, n, eb, block, recon, backend),
+        parts)
+
+
+def szp_decompress(parts: SZpParts, shape: Sequence[int], eb,
                    block: int = DEFAULT_BLOCK, recon: str = "center",
                    backend: Optional[str] = None) -> jnp.ndarray:
-    """Full SZp decompression back to a float field of ``shape``."""
+    """Full SZp decompression back to a float field of ``shape``.
+
+    Device-resident: the 2^24 dequant-exactness guard runs as an in-graph
+    ``lax.cond``, so the call never syncs to the host and composes under
+    an enclosing ``jax.jit``."""
     backend = ops.resolve_backend(backend)
     n = 1
     for s in shape:
         n *= s
-    backend = _dequant_backend_for(parts, block, backend)
-    out = _dequant_stage(parts, n, eb, block, recon, backend)
+    out = _dequant_guarded(parts, n, eb, block, recon, backend)
     return out.reshape(shape)
 
 
 def _dequant_backend_for(parts: SZpParts, block: int, backend: str) -> str:
-    """Resolved dequant backend after the 2^24 exactness guard."""
+    """Resolved dequant backend after the 2^24 exactness guard (host-side
+    form, one blocking width read; the jit paths use
+    :func:`_dequant_guarded` instead)."""
     if backend == "jnp":
         return backend
     w_max = int(np.asarray(parts.widths).max(initial=0))
@@ -207,8 +333,12 @@ def _dequant_backend_for(parts: SZpParts, block: int, backend: str) -> str:
 
 @functools.partial(jax.jit, static_argnames=("block", "backend"))
 def _quant_stage_batch(xs: jnp.ndarray, eb: float, block: int, backend: str):
-    out = jax.vmap(lambda x: _quant_stage(x, eb, block, backend))(xs)
-    return out
+    """Batched pass 1; the width max is reduced over the WHOLE batch
+    in-graph, so the caller's bucket decision reads one device scalar
+    instead of N per-field maxes."""
+    first, mags, signs, widths, w_max = jax.vmap(
+        lambda x: _quant_stage(x, eb, block, backend))(xs)
+    return first, mags, signs, widths, w_max.max()
 
 
 @functools.partial(jax.jit, static_argnames=("max_width", "backend"))
@@ -218,19 +348,51 @@ def _pack_stage_batch(first, mags, signs, widths, max_width: int,
         f, m, s, w, max_width, backend=backend))(first, mags, signs, widths)
 
 
-def szp_compress_batch(xs: jnp.ndarray, eb: float,
+def _compress_resident_batch(xs: jnp.ndarray, eb, block: int,
+                             backend: str) -> SZpParts:
+    """Batched device-resident compress: the bucket switch sits OUTSIDE
+    the vmap (one shared bucket for the whole batch, same semantics as the
+    classic batched pack), so it stays a real branch instead of a
+    both-sides ``select``."""
+    first, mags, signs, widths, _ = jax.vmap(
+        lambda x: _quant_stage(x, eb, block, backend))(xs)
+    (parts,) = _pack_switch(((first, mags, signs, widths),), block, backend,
+                            batched=True)
+    return parts
+
+
+_compress_resident_batch_jit = jax.jit(
+    _compress_resident_batch, static_argnames=("block", "backend"))
+_compress_resident_batch_donated = jax.jit(
+    _compress_resident_batch, static_argnames=("block", "backend"),
+    donate_argnums=(0,))
+
+
+def szp_compress_batch(xs: jnp.ndarray, eb,
                        block: int = DEFAULT_BLOCK,
-                       backend: Optional[str] = None) -> SZpParts:
+                       backend: Optional[str] = None, resident: bool = False,
+                       donate: bool = False) -> SZpParts:
     """Compress N stacked same-shape fields in one compiled call; every
     array of the result carries a leading batch axis.  Streams are
     byte-identical to N :func:`szp_compress` calls (the shared capacity
-    bucket covers the batch max width; valid bytes are unaffected)."""
+    bucket covers the batch max width; valid bytes are unaffected).
+
+    ``resident=True`` keeps the whole batch on device (``lax.switch``
+    bucket select, worst-case payload capacity, zero host syncs);
+    ``donate=True`` (resident only) donates the stacked input buffer."""
     if xs.ndim < 2:
         raise ValueError(f"expected (N, ...) stacked fields, got {xs.shape}")
     backend = ops.resolve_backend(backend)
+    if resident:
+        if donate:
+            with _quiet_donation():
+                return _compress_resident_batch_donated(
+                    xs, eb, block=block, backend=backend)
+        return _compress_resident_batch_jit(xs, eb, block=block,
+                                            backend=backend)
     first, mags, signs, widths, w_max = _quant_stage_batch(
         xs, eb, block=block, backend=backend)
-    mw = bitpack.width_bucket(int(w_max.max()))
+    mw = bitpack.width_bucket(int(w_max))
     return _pack_stage_batch(first, mags, signs, widths, max_width=mw,
                              backend=backend)
 
@@ -243,18 +405,35 @@ def _dequant_stage_batch(parts: SZpParts, n: int, eb: float, block: int,
         lambda p: _dequant_stage(p, n, eb, block, recon, backend))(parts)
 
 
-def szp_decompress_batch(parts: SZpParts, shape: Sequence[int], eb: float,
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block", "recon", "backend"))
+def _dequant_guarded_batch(parts: SZpParts, n: int, eb, block: int,
+                           recon: str, backend: str) -> jnp.ndarray:
+    """Batched guarded dequant: the 2^24 ``lax.cond`` is hoisted OUTSIDE
+    the vmap (scalar max over the whole batch's widths) — under vmap a
+    cond would lower to ``select`` and execute both branches."""
+    if backend == "jnp":
+        return _dequant_stage_batch(parts, n, eb, block, recon, "jnp")
+    overflow = parts.widths.astype(jnp.int32).max() >= tri_guard_width(block)
+    return jax.lax.cond(
+        overflow,
+        lambda p: _dequant_stage_batch(p, n, eb, block, recon, "jnp"),
+        lambda p: _dequant_stage_batch(p, n, eb, block, recon, backend),
+        parts)
+
+
+def szp_decompress_batch(parts: SZpParts, shape: Sequence[int], eb,
                          block: int = DEFAULT_BLOCK, recon: str = "center",
                          backend: Optional[str] = None) -> jnp.ndarray:
     """Decompress a batched stream -> (N, *shape); equal to stacking N
-    per-field :func:`szp_decompress` calls."""
+    per-field :func:`szp_decompress` calls.  Device-resident (in-graph
+    dequant guard, no host syncs)."""
     backend = ops.resolve_backend(backend)
     n = 1
     for s in shape:
         n *= s
-    backend = _dequant_backend_for(parts, block, backend)
-    out = _dequant_stage_batch(parts, n=n, eb=eb, block=block, recon=recon,
-                               backend=backend)
+    out = _dequant_guarded_batch(parts, n=n, eb=eb, block=block, recon=recon,
+                                 backend=backend)
     return out.reshape((parts.widths.shape[0],) + tuple(shape))
 
 

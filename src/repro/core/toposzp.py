@@ -29,6 +29,7 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitpack
 from repro.core.guarantees import enforce_no_fp_ft
@@ -38,8 +39,9 @@ from repro.core.relative_order import compute_ranks
 from repro.core.stencils import apply_extrema_stencils
 from repro.core.szp import (DEFAULT_BLOCK, HEADER_BYTES, SZpParts,
                             _assemble_parts, _blocked_codes, _blocked_field,
-                            _delta_blocks, _dequant_backend_for,
-                            _unpack_sections, decompress_codes)
+                            _delta_blocks, _pack_switch, _quiet_donation,
+                            _unpack_sections, decompress_codes,
+                            tri_guard_width)
 from repro.kernels import ops
 
 
@@ -121,9 +123,12 @@ _measure_one = jax.jit(_compress_measure,
 
 @functools.partial(jax.jit, static_argnames=("block", "backend"))
 def _measure_batch(fields: jnp.ndarray, eb: float, block: int, backend: str):
-    out = jax.vmap(
+    """Batched pass 1; both width maxes are reduced over the WHOLE batch
+    in-graph so the caller's bucket decision reads one scalar pair
+    instead of N per-field maxes."""
+    main, rank, labels2b, n_cp, w_max, rw_max = jax.vmap(
         lambda f: _compress_measure(f, eb, block, backend))(fields)
-    return out
+    return main, rank, labels2b, n_cp, w_max.max(), rw_max.max()
 
 
 @functools.partial(jax.jit, static_argnames=("block", "mw_main", "mw_rank",
@@ -148,39 +153,107 @@ def _pack_streams(main, rank, labels2b, n_cp, block: int, mw_main: int,
                              nbytes.astype(jnp.int32))
 
 
-def toposzp_compress(field: jnp.ndarray, eb: float,
+def _compress_resident_topo(field: jnp.ndarray, eb, block: int,
+                            backend: str) -> TopoSZpCompressed:
+    """Device-resident TopoSZp compress: measure + shared-bucket switch
+    pack, no host syncs.  Main and rank streams are packed at the SHARED
+    bucket of their joint max width (6 ``lax.switch`` branches instead of
+    36 bucket pairs); valid bytes and the serialized stream are identical
+    to the per-stream-bucket classic pack."""
+    main, rank, labels2b, n_cp, _, _ = _compress_measure(
+        field, eb, block, backend)
+    szp_parts, rank_parts = _pack_switch((main, rank), block, backend)
+    nbytes = (szp_parts.nbytes + labels2b.shape[0]
+              + rank_stream_bytes(n_cp, rank_parts.payload_nbytes, block))
+    return TopoSZpCompressed(szp_parts, labels2b, rank_parts, n_cp,
+                             nbytes.astype(jnp.int32))
+
+
+def _compress_resident_topo_batch(fields: jnp.ndarray, eb, block: int,
+                                  backend: str) -> TopoSZpCompressed:
+    """Batched device-resident TopoSZp compress (bucket switch hoisted
+    outside the vmap; one shared bucket for the whole batch)."""
+    main, rank, labels2b, n_cp, _, _ = jax.vmap(
+        lambda f: _compress_measure(f, eb, block, backend))(fields)
+    szp_parts, rank_parts = _pack_switch((main, rank), block, backend,
+                                         batched=True)
+    nbytes = (szp_parts.nbytes + labels2b.shape[1]
+              + rank_stream_bytes(n_cp, rank_parts.payload_nbytes, block))
+    return TopoSZpCompressed(szp_parts, labels2b, rank_parts, n_cp,
+                             nbytes.astype(jnp.int32))
+
+
+_topo_resident_jit = jax.jit(
+    _compress_resident_topo, static_argnames=("block", "backend"))
+_topo_resident_donated = jax.jit(
+    _compress_resident_topo, static_argnames=("block", "backend"),
+    donate_argnums=(0,))
+_topo_resident_batch_jit = jax.jit(
+    _compress_resident_topo_batch, static_argnames=("block", "backend"))
+_topo_resident_batch_donated = jax.jit(
+    _compress_resident_topo_batch, static_argnames=("block", "backend"),
+    donate_argnums=(0,))
+
+
+def toposzp_compress(field: jnp.ndarray, eb,
                      block: int = DEFAULT_BLOCK,
-                     backend: Optional[str] = None) -> TopoSZpCompressed:
-    """Compress a 2-D scalar field with topology metadata."""
+                     backend: Optional[str] = None, resident: bool = False,
+                     donate: bool = False) -> TopoSZpCompressed:
+    """Compress a 2-D scalar field with topology metadata.
+
+    ``resident=True`` runs the whole compress on device (``lax.switch``
+    bucket select; composes under an enclosing ``jax.jit``; worst-case
+    payload capacity) with streams byte-identical to the classic two-pass
+    path; ``donate=True`` (resident only) donates the field's buffer."""
     backend = ops.resolve_backend(backend)
+    if resident:
+        if donate:
+            with _quiet_donation():
+                return _topo_resident_donated(field, eb, block=block,
+                                              backend=backend)
+        return _topo_resident_jit(field, eb, block=block, backend=backend)
     main, rank, labels2b, n_cp, w_max, rw_max = _measure_one(
         field, eb, block=block, backend=backend)
+    # one blocking read for both width maxes
+    wm, rwm = np.asarray(jnp.stack([w_max, rw_max]))
     return _pack_streams(main, rank, labels2b, n_cp, block=block,
-                         mw_main=bitpack.width_bucket(int(w_max)),
-                         mw_rank=bitpack.width_bucket(int(rw_max)),
+                         mw_main=bitpack.width_bucket(int(wm)),
+                         mw_rank=bitpack.width_bucket(int(rwm)),
                          backend=backend)
 
 
-def toposzp_compress_batch(fields: jnp.ndarray, eb: float,
+def toposzp_compress_batch(fields: jnp.ndarray, eb,
                            block: int = DEFAULT_BLOCK,
-                           backend: Optional[str] = None
-                           ) -> TopoSZpCompressed:
+                           backend: Optional[str] = None,
+                           resident: bool = False,
+                           donate: bool = False) -> TopoSZpCompressed:
     """Compress N stacked same-shape fields in one compiled call.
 
     ``fields`` is (N, ny, nx); every array of the result carries a leading
     batch axis.  Streams are byte-identical to N per-field calls (the
     shared capacity bucket covers the batch max width; valid bytes are
     unaffected).  Use :func:`batch_slice` / :func:`serialize` helpers to
-    recover per-field streams.
+    recover per-field streams.  ``resident=True``/``donate=True`` as in
+    :func:`toposzp_compress`; the classic path's width→bucket decision is
+    one reduce over the whole batch (a single scalar-pair read, not N
+    per-field syncs).
     """
     if fields.ndim != 3:
         raise ValueError(f"expected (N, ny, nx) fields, got {fields.shape}")
     backend = ops.resolve_backend(backend)
+    if resident:
+        if donate:
+            with _quiet_donation():
+                return _topo_resident_batch_donated(fields, eb, block=block,
+                                                    backend=backend)
+        return _topo_resident_batch_jit(fields, eb, block=block,
+                                        backend=backend)
     main, rank, labels2b, n_cp, w_max, rw_max = _measure_batch(
         fields, eb, block=block, backend=backend)
+    wm, rwm = np.asarray(jnp.stack([w_max, rw_max]))
     return _pack_streams(main, rank, labels2b, n_cp, block=block,
-                         mw_main=bitpack.width_bucket(int(w_max.max())),
-                         mw_rank=bitpack.width_bucket(int(rw_max.max())),
+                         mw_main=bitpack.width_bucket(int(wm)),
+                         mw_rank=bitpack.width_bucket(int(rwm)),
                          backend=backend, batched=True)
 
 
@@ -262,32 +335,51 @@ def _restore_field(base, labels, ranks, eb: float, rbf_mode: str,
 
 
 @functools.partial(jax.jit, static_argnames=("shape", "block", "rbf_mode",
-                                             "recon", "deq_backend",
-                                             "backend"))
-def _decompress_one(comp, eb, shape, block, rbf_mode, recon, deq_backend,
-                    backend):
-    base, labels, ranks = _decode_field(comp, shape, eb, block, recon,
-                                        deq_backend, backend)
-    return _restore_field(base, labels, ranks, eb, rbf_mode, backend)
+                                             "recon", "backend"))
+def _decompress_one(comp, eb, shape, block, rbf_mode, recon, backend):
+    """Single-field decompress behind the in-graph 2^24 dequant guard (a
+    ``lax.cond`` on the device-computed max width — no host sync)."""
+    def run(deq_backend):
+        def fn(c):
+            base, labels, ranks = _decode_field(c, shape, eb, block, recon,
+                                                deq_backend, backend)
+            return _restore_field(base, labels, ranks, eb, rbf_mode, backend)
+        return fn
+    if backend == "jnp":
+        return run("jnp")(comp)
+    overflow = (comp.szp.widths.astype(jnp.int32).max()
+                >= tri_guard_width(block))
+    return jax.lax.cond(overflow, run("jnp"), run(backend), comp)
 
 
 @functools.partial(jax.jit, static_argnames=("shape", "block", "rbf_mode",
-                                             "recon", "deq_backend",
-                                             "backend"))
-def _decompress_batch(comp, eb, shape, block, rbf_mode, recon, deq_backend,
-                      backend):
-    def one(c):
-        base, labels, ranks = _decode_field(c, shape, eb, block, recon,
-                                            deq_backend, backend)
-        return _restore_field(base, labels, ranks, eb, rbf_mode, backend)
-    return jax.vmap(one)(comp)
+                                             "recon", "backend"))
+def _decompress_batch(comp, eb, shape, block, rbf_mode, recon, backend):
+    """Batched decompress; the dequant guard ``lax.cond`` is hoisted
+    OUTSIDE the vmap (scalar max over the whole batch's widths) — under
+    vmap a cond lowers to ``select`` and executes both branches."""
+    def run(deq_backend):
+        def one(c):
+            base, labels, ranks = _decode_field(c, shape, eb, block, recon,
+                                                deq_backend, backend)
+            return _restore_field(base, labels, ranks, eb, rbf_mode, backend)
+        return lambda cb: jax.vmap(one)(cb)
+    if backend == "jnp":
+        return run("jnp")(comp)
+    overflow = (comp.szp.widths.astype(jnp.int32).max()
+                >= tri_guard_width(block))
+    return jax.lax.cond(overflow, run("jnp"), run(backend), comp)
 
 
 def toposzp_decompress(comp: TopoSZpCompressed, shape: Sequence[int],
-                       eb: float, block: int = DEFAULT_BLOCK,
+                       eb, block: int = DEFAULT_BLOCK,
                        rbf_mode: str = "shepard", recon: str = "center",
                        backend: Optional[str] = None) -> jnp.ndarray:
     """Decompress with extrema restoration + RBF saddle refinement.
+
+    Device-resident: the 2^24 dequant-exactness guard runs as an in-graph
+    ``lax.cond``, so the call never syncs to the host and composes under
+    an enclosing ``jax.jit``.
 
     Guarantees on the output (tested in tests/test_toposzp_guarantees.py),
     independent of the backend:
@@ -295,24 +387,21 @@ def toposzp_decompress(comp: TopoSZpCompressed, shape: Sequence[int],
       * zero FP, zero FT w.r.t. the original label map
     """
     backend = ops.resolve_backend(backend)
-    deq_backend = _dequant_backend_for(comp.szp, block, backend)
     return _decompress_one(comp, eb, shape=tuple(shape), block=block,
-                           rbf_mode=rbf_mode, recon=recon,
-                           deq_backend=deq_backend, backend=backend)
+                           rbf_mode=rbf_mode, recon=recon, backend=backend)
 
 
 def toposzp_decompress_batch(comp: TopoSZpCompressed, shape: Sequence[int],
-                             eb: float, block: int = DEFAULT_BLOCK,
+                             eb, block: int = DEFAULT_BLOCK,
                              rbf_mode: str = "shepard",
                              recon: str = "center",
                              backend: Optional[str] = None) -> jnp.ndarray:
     """Decompress a batched stream -> (N, ny, nx); equal to stacking N
-    per-field :func:`toposzp_decompress` calls."""
+    per-field :func:`toposzp_decompress` calls.  Device-resident (in-graph
+    dequant guard, no host syncs)."""
     backend = ops.resolve_backend(backend)
-    deq_backend = _dequant_backend_for(comp.szp, block, backend)
     return _decompress_batch(comp, eb, shape=tuple(shape), block=block,
-                             rbf_mode=rbf_mode, recon=recon,
-                             deq_backend=deq_backend, backend=backend)
+                             rbf_mode=rbf_mode, recon=recon, backend=backend)
 
 
 def toposzp_roundtrip(field: jnp.ndarray, eb: float,

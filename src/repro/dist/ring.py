@@ -44,11 +44,12 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitpack import (pack_bits, pack_blocks, sum_width,
-                                unpack_bits, unpack_blocks)
+from repro.core.bitpack import (pack_bits, sum_width, unpack_bits,
+                                unpack_blocks)
 from repro.core.quantize import dequantize, quantize
 from repro.dist.collectives import (_EB_TINY, INT32_MAX, _check_code_range,
                                     _residual, max_code, protect_k)
+from repro.kernels import ops
 from repro.utils import bitwidth, cdiv
 
 BLOCK_K = 256                 # values per packed block (one width byte each)
@@ -145,6 +146,7 @@ def ordered_fold(vals: jnp.ndarray) -> jnp.ndarray:
 def ring_allreduce_codes(
         q: jnp.ndarray, axis: str, n: int, rel_eb: float,
         side_vals: Optional[jnp.ndarray] = None, block_k: int = BLOCK_K,
+        backend: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], jnp.ndarray]:
     """Bitpacked ring all-reduce of int32 codes (+ fp32 sidecar circulation).
 
@@ -153,6 +155,10 @@ def ring_allreduce_codes(
          ``n * max|q| <= int32 max`` (caller-guarded via ``max_code``).
       side_vals: optional (U,) fp32 — this member's exact values at the
          sidecar union; circulated by origin alongside the packed body.
+      backend: kernels.ops backend for the per-hop BE pack (the same
+         tiled local-pack + compaction kernels the resident compressor
+         runs; ``None`` resolves to the hardware default).  Buffers are
+         byte-identical across backends.
 
     Returns:
       (code_sum (P,) int32  — bit-identical to ``psum(q, axis)``,
@@ -166,6 +172,7 @@ def ring_allreduce_codes(
         raise ValueError(
             f"code length {p} must be a multiple of block_k={block_k} "
             f"and of 8 (sign-plane bytes); pad the stream first")
+    backend = ops.resolve_backend(backend)
     b_blocks = p // block_k
     sign_bytes = p // 8
     w0 = base_width(rel_eb)
@@ -186,7 +193,10 @@ def ring_allreduce_codes(
         mag_cap = b_blocks * cdiv(block_k * w_cap, 8)
         mags = jnp.abs(msg).astype(jnp.uint32).reshape(b_blocks, block_k)
         widths = bitwidth(mags.max(axis=1))   # (B,) dynamic, <= w_cap
-        buf, _, total = pack_blocks(mags, widths, max_width=w_cap)
+        local = ops.local_pack(mags, widths, max_width=w_cap,
+                               backend=backend)
+        buf, _, total = ops.compact_bytes(local, widths, block_k,
+                                          backend=backend)
         signs = pack_bits((msg < 0).astype(jnp.uint32))
         parts = [buf, signs, widths.astype(jnp.uint8)]
         if vmsg is not None:
@@ -233,7 +243,8 @@ def _bucket_leaves(sizes: List[int], bucket_elems: int) -> List[List[int]]:
 def packed_psum_tree(grads: Any, axes: Sequence[str], rel_eb: float,
                      err: Optional[Any], topo_frac: float,
                      block_k: int = BLOCK_K,
-                     bucket_elems: int = BUCKET_ELEMS) -> Tuple[Any, Any]:
+                     bucket_elems: int = BUCKET_ELEMS,
+                     backend: Optional[str] = None) -> Tuple[Any, Any]:
     """Compressed mean-psum over a pytree with the bitpacked ring wire.
 
     Same contract (and bit-identical results on the ring-ordered
@@ -308,7 +319,8 @@ def packed_psum_tree(grads: Any, axes: Sequence[str], rel_eb: float,
             side_vals = ge_cat[union]
 
         q_sum, vals_by_origin, _ = ring_allreduce_codes(
-            q_pad, axis, n, rel_eb, side_vals=side_vals, block_k=block_k)
+            q_pad, axis, n, rel_eb, side_vals=side_vals, block_k=block_k,
+            backend=backend)
         q_sum = q_sum[:q_cat.shape[0]]
 
         gsum_cat = jnp.concatenate(

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: byte-stream compaction (SZp "BE" stage, phase 2).
+
+Phase 1 (``kernels/bitpack_pack.py``) leaves every block's packed bytes at
+LOCAL offset 0 of a (B, NBM) tile; this kernel moves block b's row to its
+global byte offset, producing the contiguous payload.  It replaces the XLA
+scatter of ``core.bitpack.compact_local_bytes`` (a (B*NBM,)-index
+``.at[].set`` with drop-mode bounds handling) with dynamic row stores: the
+grid walks block tiles in order and each block writes its NBM-byte row at
+``out[offs[b] : offs[b]+NBM]``.
+
+Correctness of the overlapping stores relies on the TPU grid being
+sequential and ``fori_loop`` ordering rows within a tile: block b's window
+may reach into block b+1's bytes (its zero tail), but b+1 stores later and
+rewrites them, so the last writer of every valid byte is its owning block.
+Zero-width blocks (and tile-padding rows) are skipped entirely, which also
+keeps every issued store inside the ``B*NBM`` capacity.
+
+The full output lives in one revisited VMEM block, so ``cap = B*NBM`` must
+fit VMEM — true for every capacity the two-pass pack produces on
+block-32 fields up to the multi-megabyte range.  Validated against
+``core.bitpack.compact_local_bytes`` in interpret mode
+(tests/test_device_resident.py, tests/test_backend_parity.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TB = 256  # blocks per grid instance
+
+
+def _make_compact_kernel(nbm: int, tb: int):
+    def kernel(local_ref, offs_ref, nb_ref, out_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _zero_init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        def body(r, carry):
+            off = offs_ref[r, 0]
+            nb = nb_ref[r, 0]
+
+            @pl.when(nb > 0)
+            def _store_row():
+                out_ref[0, pl.ds(off, nbm)] = local_ref[r, :]
+            return carry
+
+        jax.lax.fori_loop(0, tb, body, 0)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def compact_local_blocks(local: jnp.ndarray, offs: jnp.ndarray,
+                         nb: jnp.ndarray, tb: int = DEFAULT_TB,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Scatter (B, NBM) local rows to their global offsets -> (cap,) uint8.
+
+    ``offs``/``nb`` are (B,) int32 exclusive byte offsets / valid byte
+    counts (``core.bitpack.block_nbytes`` of the widths); rows with
+    ``nb == 0`` are skipped.  B must be a multiple of ``tb`` (the ops.py
+    wrapper pads with ``nb == 0`` rows).  Bytes past the valid total are 0,
+    matching the ``compact_local_bytes`` contract.
+    """
+    b, nbm = local.shape
+    assert b % tb == 0, f"B={b} not a multiple of tile {tb}"
+    cap = b * nbm
+    out = pl.pallas_call(
+        _make_compact_kernel(nbm, tb),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, nbm), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, cap), jnp.uint8),
+        interpret=interpret,
+    )(local, offs.astype(jnp.int32)[:, None], nb.astype(jnp.int32)[:, None])
+    return out[0]

@@ -26,6 +26,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bitpack_compact as _bck
 from repro.kernels import bitpack_pack as _bpk
 from repro.kernels import cp_detect as _cpk
 from repro.kernels import extrema_restore as _exk
@@ -112,6 +113,33 @@ def local_pack(mags: jnp.ndarray, widths: jnp.ndarray, max_width: int = 32,
     out = _bpk.local_pack_blocks(mp, wp, max_width=max_width, tb=tb,
                                  interpret=_interp(backend))
     return out[:b]
+
+
+def compact_bytes(local: jnp.ndarray, widths: jnp.ndarray, k: int,
+                  backend: str = DEFAULT_BACKEND, tb: int = _bck.DEFAULT_TB):
+    """Tiled BE phase 2: per-block rows -> contiguous payload.
+
+    Same ``(buf, offs, total)`` contract as
+    ``core.bitpack.compact_local_bytes`` with ``cap = B * local.shape[1]``;
+    the offsets prefix sum stays in XLA, only the offset-addressed byte
+    moves run in the kernel.
+    """
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return _ref.compact_bytes_ref(local, widths, k)
+    from repro.core.bitpack import block_nbytes
+    from repro.utils import exclusive_cumsum
+    b = local.shape[0]
+    nb = block_nbytes(widths.astype(jnp.int32), k)
+    offs = exclusive_cumsum(nb)
+    total = (offs[-1] + nb[-1] if b > 0 else jnp.int32(0)).astype(jnp.int32)
+    tb = _row_tile(b, tb)
+    lp = pad_to_multiple(local, tb, axis=0, mode="constant")
+    nbp = pad_to_multiple(nb, tb, axis=0, mode="constant")
+    offp = pad_to_multiple(offs, tb, axis=0, mode="constant")
+    buf = _bck.compact_local_blocks(lp, offp, nbp, tb=tb,
+                                    interpret=_interp(backend))
+    return buf[: b * local.shape[1]], offs, total
 
 
 def cp_detect(field: jnp.ndarray, backend: str = DEFAULT_BACKEND,

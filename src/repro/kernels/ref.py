@@ -41,6 +41,13 @@ def local_pack_ref(mags: jnp.ndarray, widths: jnp.ndarray,
     return local_pack_bytes(mags, widths, max_width)
 
 
+def compact_bytes_ref(local: jnp.ndarray, widths: jnp.ndarray, k: int):
+    """Oracle for kernels.bitpack_compact.compact_local_blocks (same
+    (buf, offs, total) contract as the XLA scatter)."""
+    from repro.core.bitpack import compact_local_bytes
+    return compact_local_bytes(local, widths, k)
+
+
 def cp_detect_ref(field: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.cp_detect.cp_detect (== core classify)."""
     return _classify(field)

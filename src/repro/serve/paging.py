@@ -33,8 +33,8 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.bitpack import width_bucket
 from repro.core.critical_points import classify
 from repro.core.guarantees import violations
 from repro.core.szp import (DEFAULT_BLOCK, szp_compress_batch,
@@ -232,29 +232,70 @@ class PagePool:
     # -- compression tier ---------------------------------------------------
 
     def _roundtrip(self, fields):
-        """One batched compress + decompress; returns (streams, dec)."""
+        """One batched device-resident compress + decompress.
+
+        The compress runs the on-device bucket select (``resident=True``)
+        and, when the fields aren't needed again for verification, donates
+        the gathered buffer; nothing here syncs to the host — byte
+        accounting comes back as device arrays for the per-sweep read.
+        """
+        donate = not self.verify
         if self.kv_mode == "szp":
             comp = szp_compress_batch(fields, self.eb, block=self.block,
-                                      backend=self.backend)
+                                      backend=self.backend, resident=True,
+                                      donate=donate)
             dec = szp_decompress_batch(comp, self._field_shape, self.eb,
                                        block=self.block,
                                        backend=self.backend)
-            return comp, dec, np.asarray(comp.nbytes)
-        comp = toposzp_compress_batch(fields, self.eb, block=self.block,
-                                      backend=self.backend)
-        dec = toposzp_decompress_batch(comp, self._field_shape, self.eb,
-                                       block=self.block,
-                                       backend=self.backend)
-        return comp, dec, np.asarray(comp.nbytes)
+        else:
+            comp = toposzp_compress_batch(fields, self.eb, block=self.block,
+                                          backend=self.backend, resident=True,
+                                          donate=donate)
+            dec = toposzp_decompress_batch(comp, self._field_shape, self.eb,
+                                           block=self.block,
+                                           backend=self.backend)
+        return comp, dec
+
+    def _stream_widths_max(self, comp):
+        """Device scalar: the stream's max block width (both sections for
+        TopoSZp — the resident pack uses their shared bucket)."""
+        if self.kv_mode == "szp":
+            return comp.widths.astype(jnp.int32).max()
+        return jnp.maximum(comp.szp.widths.astype(jnp.int32).max(),
+                           comp.ranks.widths.astype(jnp.int32).max())
+
+    def _trim_to_bucket(self, comp, wb: int):
+        """Slice the worst-case resident payload capacity down to the
+        measured WIDTH_BUCKETS capacity for the durable stored copy — a
+        static device-side slice (6 possible shapes), no transfer; valid
+        bytes always fit the bucket capacity."""
+        def cap(parts):
+            k = self.block - 1
+            return parts.widths.shape[1] * ((k * wb + 7) // 8)
+
+        def trim(parts):
+            c = min(cap(parts), parts.payload.shape[1])
+            return parts._replace(payload=parts.payload[:, :c])
+        if self.kv_mode == "szp":
+            return trim(comp)
+        return comp._replace(szp=trim(comp.szp), ranks=trim(comp.ranks))
 
     def compress_pages(self, caches, pages: List[Tuple[int, int]]):
         """Compress ``pages`` into the tier store and materialize their
-        reconstructions in the caches.  Returns the updated caches."""
+        reconstructions in the caches.  Returns the updated caches.
+
+        The whole sweep stays on device; byte accounting (and the verify
+        scalars) are read back in ONE blocking transfer at the end, not
+        once per page or per chunk.
+        """
         if self.kv_mode == "raw" or not pages:
             return caches
+        pending = []
         for lo in range(0, len(pages), self.max_pages_per_call):
-            caches = self._compress_chunk(caches,
-                                          pages[lo:lo + self.max_pages_per_call])
+            caches, rec = self._compress_chunk(
+                caches, pages[lo:lo + self.max_pages_per_call])
+            pending.append(rec)
+        self._finalize_sweep(pending)
         return caches
 
     def _compress_chunk(self, caches, chunk: List[Tuple[int, int]]):
@@ -269,27 +310,43 @@ class PagePool:
         starts = jnp.asarray([p * self.page_size for _, p in padded],
                              jnp.int32)
         fields = self._gather(caches, slots, starts)
-        comp, dec, nbytes = self._roundtrip(fields)
+        comp, dec = self._roundtrip(fields)
+        l2 = self.fields_per_page
+        acct = {"page_bytes": comp.nbytes.reshape(bucket, l2).sum(axis=1),
+                "w_max": self._stream_widths_max(comp)}
         if self.verify:
             max_err, fp = _verify_fields(fields, dec)
-            nf = m * self.fields_per_page
-            self.stats["max_abs_err"] = max(self.stats["max_abs_err"],
-                                            float(max_err[:nf].max()))
-            self.stats["false_critical_points"] += int(fp[:nf].sum())
-            self.stats["fields_verified"] += nf
+            nf = m * l2
+            acct["max_err"] = max_err[:nf].max()
+            acct["fp"] = fp[:nf].sum()
         caches = self._scatter(caches, dec, slots, starts)
 
         cid = self._next_call
         self._next_call += 1
         self._calls[cid] = {"comp": comp, "pages": list(chunk), "refs": m}
-        l2 = self.fields_per_page
-        for j, key in enumerate(chunk):
-            self._compressed[key] = {
-                "call": cid, "offset": j,
-                "bytes": int(nbytes[j * l2:(j + 1) * l2].sum())}
-        self.stats["pages_compressed"] += m
-        self.stats["compress_calls"] += 1
-        return caches
+        return caches, {"cid": cid, "chunk": chunk, "acct": acct}
+
+    def _finalize_sweep(self, pending: List[Dict]) -> None:
+        """ONE device->host read for the whole sweep's accounting, then
+        host bookkeeping + trimming the stored streams to their measured
+        bucket capacity."""
+        accts = jax.device_get([rec["acct"] for rec in pending])
+        for rec, acct in zip(pending, accts):
+            cid, chunk = rec["cid"], rec["chunk"]
+            wb = width_bucket(int(acct["w_max"]))
+            self._calls[cid]["comp"] = self._trim_to_bucket(
+                self._calls[cid]["comp"], wb)
+            for j, key in enumerate(chunk):
+                self._compressed[key] = {
+                    "call": cid, "offset": j,
+                    "bytes": int(acct["page_bytes"][j])}
+            if self.verify:
+                self.stats["max_abs_err"] = max(self.stats["max_abs_err"],
+                                                float(acct["max_err"]))
+                self.stats["false_critical_points"] += int(acct["fp"])
+                self.stats["fields_verified"] += len(chunk) * self.fields_per_page
+            self.stats["pages_compressed"] += len(chunk)
+            self.stats["compress_calls"] += 1
 
     def fetch_page(self, slot: int, page: int) -> jnp.ndarray:
         """Decompress one page from the tier store (on-demand read path):

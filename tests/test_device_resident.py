@@ -1,0 +1,235 @@
+"""Device-residency regression tests for the resident compression core.
+
+Three layers of proof that the jitted round-trip never touches the host:
+
+  * ``jax.transfer_guard("disallow")`` around the already-compiled calls —
+    any implicit host->device transfer (a Python scalar or numpy array
+    sneaking into the graph) raises.
+  * Whole compress -> decompress round-trips traced under ONE enclosing
+    ``jax.jit`` — any ``int(np.asarray(tracer))`` host sync fails at trace
+    time, which is the strongest structural zero-sync proof available on
+    CPU (where device->host reads are zero-copy and guard-invisible).
+  * Byte-parity: the resident (``lax.switch``-packed, worst-case-padded)
+    streams serialize to EXACTLY the classic two-pass streams.
+
+Plus compaction-kernel-vs-jnp-oracle parity across odd block counts and
+degenerate width distributions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitpack
+from repro.core import io as cio
+from repro.core.szp import (szp_compress, szp_compress_batch, szp_decompress,
+                            szp_decompress_batch, tri_guard_width)
+from repro.core.toposzp import (batch_slice, toposzp_compress,
+                                toposzp_compress_batch, toposzp_decompress)
+from repro.kernels import ops
+
+EB = 1e-3
+BACKENDS = ("jnp", "interpret")
+
+
+def _field(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# --------------------------------------------------------------------------
+# Compaction kernel vs jnp oracle
+# --------------------------------------------------------------------------
+
+def _local_blocks(b, k, widths, seed=0):
+    """Phase-1 local pack for ``b`` blocks with the given width per block."""
+    rng = np.random.default_rng(seed)
+    mags = np.stack([
+        rng.integers(0, 1 << w, size=k).astype(np.uint32)
+        if w else np.zeros(k, np.uint32) for w in widths])
+    mags = jnp.asarray(mags)
+    wid = jnp.asarray(np.asarray(widths, np.uint8))
+    local = ops.local_pack(mags, wid, max_width=bitpack.MAX_WIDTH,
+                           backend="jnp")
+    return local, wid
+
+
+@pytest.mark.parametrize("b", [1, 5, 31, 100, 129, 257])
+def test_compact_kernel_matches_oracle_odd_sizes(b):
+    k = 31
+    rng = np.random.default_rng(b)
+    widths = rng.integers(0, bitpack.MAX_WIDTH + 1, size=b)
+    local, wid = _local_blocks(b, k, widths, seed=b)
+    ref_buf, ref_offs, ref_total = bitpack.compact_local_bytes(local, wid, k)
+    buf, offs, total = ops.compact_bytes(local, wid, k, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(ref_buf))
+    np.testing.assert_array_equal(np.asarray(offs), np.asarray(ref_offs))
+    assert int(total) == int(ref_total)
+
+
+@pytest.mark.parametrize("widths_kind", ["all_zero", "all_max", "spiky"])
+def test_compact_kernel_degenerate_width_distributions(widths_kind):
+    b, k = 64, 31
+    if widths_kind == "all_zero":
+        widths = np.zeros(b, np.int64)
+    elif widths_kind == "all_max":
+        widths = np.full(b, bitpack.MAX_WIDTH)
+    else:  # one wide block in a sea of constants
+        widths = np.zeros(b, np.int64)
+        widths[b // 2] = bitpack.MAX_WIDTH
+    local, wid = _local_blocks(b, k, widths, seed=3)
+    ref_buf, _, ref_total = bitpack.compact_local_bytes(local, wid, k)
+    buf, _, total = ops.compact_bytes(local, wid, k, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(ref_buf))
+    assert int(total) == int(ref_total)
+
+
+# --------------------------------------------------------------------------
+# Resident == classic byte parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_szp_resident_serializes_identically(backend):
+    x = _field((48, 96), seed=1)
+    classic = cio.serialize_szp(szp_compress(x, EB, backend=backend),
+                                x.shape, EB)
+    resident = cio.serialize_szp(
+        szp_compress(x, EB, backend=backend, resident=True), x.shape, EB)
+    assert resident == classic
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_szp_resident_batch_serializes_identically(backend):
+    xs = jnp.stack([_field((32, 64), seed=s, scale=10.0 ** (s % 3))
+                    for s in range(4)])
+    classic = szp_compress_batch(xs, EB, backend=backend)
+    resident = szp_compress_batch(xs, EB, backend=backend, resident=True)
+    for i in range(xs.shape[0]):
+        sl = lambda p: jax.tree_util.tree_map(lambda a: a[i], p)
+        assert (cio.serialize_szp(sl(resident), xs.shape[1:], EB)
+                == cio.serialize_szp(sl(classic), xs.shape[1:], EB))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_toposzp_resident_serializes_identically(backend):
+    x = _field((40, 64), seed=2)
+    classic = cio.serialize_toposzp(
+        toposzp_compress(x, EB, backend=backend), x.shape, EB)
+    resident = cio.serialize_toposzp(
+        toposzp_compress(x, EB, backend=backend, resident=True), x.shape, EB)
+    assert resident == classic
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_toposzp_resident_batch_serializes_identically(backend):
+    xs = jnp.stack([_field((32, 64), seed=10 + s) for s in range(3)])
+    classic = toposzp_compress_batch(xs, EB, backend=backend)
+    resident = toposzp_compress_batch(xs, EB, backend=backend, resident=True)
+    for i in range(xs.shape[0]):
+        assert (cio.serialize_toposzp(batch_slice(resident, i),
+                                      xs.shape[1:], EB)
+                == cio.serialize_toposzp(batch_slice(classic, i),
+                                         xs.shape[1:], EB))
+
+
+# --------------------------------------------------------------------------
+# Transfer-guard: jitted round-trip with zero implicit transfers
+# --------------------------------------------------------------------------
+
+def test_szp_roundtrip_under_transfer_guard():
+    x = _field((64, 128), seed=4)
+    eb = jnp.float32(EB)            # pre-placed: a Python float would h2d
+    # warm-up compile outside the guard (compilation may transfer consts)
+    parts = szp_compress(x, eb, resident=True, backend="jnp")
+    szp_decompress(parts, x.shape, eb, backend="jnp").block_until_ready()
+    with jax.transfer_guard("disallow"):
+        parts = szp_compress(x, eb, resident=True, backend="jnp")
+        out = szp_decompress(parts, x.shape, eb, backend="jnp")
+        out.block_until_ready()
+    assert float(jnp.abs(out - x).max()) <= EB + 1e-7
+
+
+def test_szp_batch_roundtrip_under_transfer_guard():
+    xs = jnp.stack([_field((32, 64), seed=20 + s) for s in range(3)])
+    eb = jnp.float32(EB)
+    parts = szp_compress_batch(xs, eb, resident=True, backend="jnp")
+    szp_decompress_batch(parts, xs.shape[1:], eb,
+                         backend="jnp").block_until_ready()
+    with jax.transfer_guard("disallow"):
+        parts = szp_compress_batch(xs, eb, resident=True, backend="jnp")
+        outs = szp_decompress_batch(parts, xs.shape[1:], eb, backend="jnp")
+        outs.block_until_ready()
+    assert float(jnp.abs(outs - xs).max()) <= EB + 1e-7
+
+
+def test_toposzp_compress_under_transfer_guard():
+    x = _field((48, 64), seed=5)
+    eb = jnp.float32(EB)
+    toposzp_compress(x, eb, resident=True,
+                     backend="jnp").szp.payload.block_until_ready()
+    with jax.transfer_guard("disallow"):
+        comp = toposzp_compress(x, eb, resident=True, backend="jnp")
+        comp.szp.payload.block_until_ready()
+    out = toposzp_decompress(comp, x.shape, eb, backend="jnp")
+    assert float(jnp.abs(out - x).max()) <= 2 * EB + 1e-7
+
+
+# --------------------------------------------------------------------------
+# Structural zero-sync proof: the whole round-trip traces under ONE jit
+# --------------------------------------------------------------------------
+
+def test_roundtrip_traces_under_single_jit():
+    """Compress -> decompress as one jitted function: any hidden host sync
+    (``int(np.asarray(tracer))``) would raise a TracerError here."""
+    x = _field((64, 96), seed=6)
+
+    @jax.jit
+    def roundtrip(x, eb):
+        parts = szp_compress(x, eb, resident=True, backend="jnp")
+        return szp_decompress(parts, x.shape, eb, backend="jnp"), parts.nbytes
+
+    out, nbytes = roundtrip(x, jnp.float32(EB))
+    assert float(jnp.abs(out - x).max()) <= EB + 1e-7
+    assert int(nbytes) > 0
+
+
+def test_batch_roundtrip_traces_under_single_jit():
+    xs = jnp.stack([_field((32, 64), seed=30 + s) for s in range(3)])
+
+    @jax.jit
+    def roundtrip(xs, eb):
+        parts = szp_compress_batch(xs, eb, resident=True, backend="jnp")
+        return szp_decompress_batch(parts, xs.shape[1:], eb, backend="jnp")
+
+    outs = roundtrip(xs, jnp.float32(EB))
+    assert float(jnp.abs(outs - xs).max()) <= EB + 1e-7
+
+
+def test_resident_guard_picks_exact_path_for_wide_blocks():
+    """Fields whose widths cross the 2^24 tri-matmul limit must flip the
+    in-graph ``lax.cond`` to the exact int32-cumsum dequant: the guarded
+    backend output must match the always-exact jnp dequant bit-for-bit."""
+    block = 32
+    assert tri_guard_width(block) <= bitpack.MAX_WIDTH
+    x = _field((32, 64), seed=7, scale=1e3)   # codes ~1e7: past the guard
+    eb = jnp.float32(1e-4)
+    parts = szp_compress(x, eb, resident=True, backend="interpret")
+    assert int(np.asarray(parts.widths).max()) >= tri_guard_width(block)
+
+    @jax.jit
+    def dec(parts, eb):
+        return szp_decompress(parts, x.shape, eb, backend="interpret")
+
+    guarded = dec(parts, eb)
+    exact = szp_decompress(parts, x.shape, eb, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(guarded), np.asarray(exact))
+
+
+def test_donated_compress_matches_undonated():
+    x = _field((48, 64), seed=8)
+    keep = cio.serialize_szp(szp_compress(x, EB, resident=True,
+                                          backend="jnp"), x.shape, EB)
+    xd = jnp.array(x)   # fresh buffer to donate
+    don = cio.serialize_szp(szp_compress(xd, EB, resident=True, donate=True,
+                                         backend="jnp"), x.shape, EB)
+    assert don == keep
