@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import bench_grid, emit, reset_records, timeit, \
     write_json
+from repro import obs
 from repro.core import bitpack
 from repro.core.baselines import (topo_iter_compress, topo_iter_decompress)
 from repro.core.szp import (DEFAULT_BLOCK, szp_compress, szp_decompress)
@@ -127,6 +128,41 @@ def _resident_records(f: jnp.ndarray, backend: str) -> None:
     })
 
 
+def _obs_overhead_record(f: jnp.ndarray, backend: str) -> None:
+    """Obs-enabled vs obs-disabled compress+decompress time.
+
+    The two sides are timed INTERLEAVED (min-of-5 pairs) so CPU frequency
+    drift hits both equally; the CI gate (baseline_core.json) holds
+    ``obs_vs_off`` at <= 1.05x — the spans/counters must stay noise-level
+    on the classic hot path."""
+    comp = toposzp_compress(f, EB, backend=backend)
+    ny, nx = f.shape
+
+    def fn():
+        c = toposzp_compress(f, EB, backend=backend)
+        return toposzp_decompress(comp, (ny, nx), EB, backend=backend), c
+
+    was = obs.enabled()
+    obs.set_enabled(False)
+    jax.block_until_ready(fn())
+    obs.set_enabled(True)
+    jax.block_until_ready(fn())                           # warm both paths
+    t_off = t_on = None
+    for _ in range(5):
+        obs.set_enabled(False)
+        toff = timeit(fn, warmup=0, iters=1)
+        obs.set_enabled(True)
+        ton = timeit(fn, warmup=0, iters=1)
+        t_off = toff if t_off is None else min(t_off, toff)
+        t_on = ton if t_on is None else min(t_on, ton)
+    obs.set_enabled(was)
+    obs.reset()
+    emit("fig7/core/obs_overhead", t_on * 1e6, {
+        "backend": backend,
+        "obs_vs_off": t_on / t_off,
+    })
+
+
 def run(smoke: bool = False):
     ny, nx = bench_grid("CLIMATE")
     backend = ops.resolve_backend(None)
@@ -139,6 +175,7 @@ def run(smoke: bool = False):
 
     _stage_records(fields[0], backend)
     _resident_records(fields[0], backend)
+    _obs_overhead_record(fields[0], backend)
 
     for f, field_name in zip(fields, names):
         comp = toposzp_compress(f, EB)

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, reset_records, write_json
+from repro import obs
 from repro.models import lm, registry
 from repro.serve import ContinuousServeEngine, Request, ServeEngine
 
@@ -98,6 +99,38 @@ def kv_peak_ratio(rep):
             peak["cold_pages"] / peak["occupied_pages"])
 
 
+def obs_overhead_record(cfg, params, reqs, num_slots: int) -> None:
+    """Obs-enabled vs obs-disabled serve wall time on the compressing
+    tier (interleaved min-of-3 pairs; the CI gate in baseline_serve.json
+    holds ``obs_vs_off`` at <= 1.05x).  The obs-on runs also exercise the
+    per-sweep counter feed at the existing ``_finalize_sweep`` sync."""
+    eng = ContinuousServeEngine(cfg, params, max_len=MAX_LEN,
+                                num_slots=num_slots, page_size=PAGE_SIZE,
+                                kv_mode="szp", kv_eb=EB)
+    was = obs.enabled()
+    obs.set_enabled(False)
+    eng.serve(reqs)                                    # compile
+    obs.set_enabled(True)
+    eng.serve(reqs)
+    t_off = t_on = None
+    for _ in range(3):
+        obs.set_enabled(False)
+        t0 = time.perf_counter()
+        eng.serve(reqs)
+        toff = time.perf_counter() - t0
+        obs.set_enabled(True)
+        t0 = time.perf_counter()
+        rep = eng.serve(reqs)
+        ton = time.perf_counter() - t0
+        t_off = toff if t_off is None else min(t_off, toff)
+        t_on = ton if t_on is None else min(t_on, ton)
+    obs.set_enabled(was)
+    obs.reset()
+    emit("serve/obs_overhead", 1e6 * t_on / rep.generated_tokens, {
+        "obs_vs_off": t_on / t_off,
+    })
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true")
@@ -144,8 +177,10 @@ def main():
         emit(f"serve/continuous_{kv_mode}", 1e6 * dt / rep.generated_tokens,
              metrics)
 
+    obs_overhead_record(cfg, params, reqs, args.num_slots)
+
     if args.json:
-        write_json(args.json, "serve", smoke=args.smoke)
+        write_json(args.json, "bench_serve", smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -32,14 +32,27 @@ import sys
 DEFAULT_BASELINE = "benchmarks/baseline_grad_compress.json"
 SCHEMA_VERSION = 1
 
+# Legacy bench names still accepted from checked-in baselines: bench_serve
+# wrote "serve" before the names were normalized to the module name.
+BENCH_ALIASES = {"serve": "bench_serve"}
+
+
+def canonical_bench(name):
+    return BENCH_ALIASES.get(name, name)
+
+
+def load_doc(path: str, what: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise SystemExit(f"unsupported {what} schema_version "
+                         f"{doc.get('schema_version')!r} in {path}")
+    return doc
+
 
 def load_metrics(results_path: str) -> dict:
     """Flatten a results file into {record_name: {metric: value}}."""
-    with open(results_path) as f:
-        doc = json.load(f)
-    if doc.get("schema_version") != SCHEMA_VERSION:
-        raise SystemExit(f"unsupported results schema_version "
-                         f"{doc.get('schema_version')!r} in {results_path}")
+    doc = load_doc(results_path, "results")
     out = {}
     for rec in doc.get("records", []):
         metrics = dict(rec.get("metrics", {}))
@@ -79,14 +92,17 @@ def main() -> int:
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     args = ap.parse_args()
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    if baseline.get("schema_version") != SCHEMA_VERSION:
-        raise SystemExit(f"unsupported baseline schema_version "
-                         f"{baseline.get('schema_version')!r}")
+    baseline = load_doc(args.baseline, "baseline")
     gates = baseline.get("gates", [])
     if not gates:
         raise SystemExit(f"no gates defined in {args.baseline}")
+
+    results_doc = load_doc(args.results, "results")
+    rb, bb = results_doc.get("bench"), baseline.get("bench")
+    if (rb is not None and bb is not None
+            and canonical_bench(rb) != canonical_bench(bb)):
+        raise SystemExit(f"bench mismatch: results are from "
+                         f"{rb!r} but the baseline gates {bb!r}")
 
     current = load_metrics(args.results)
     failures = []

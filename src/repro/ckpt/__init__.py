@@ -1,8 +1,8 @@
 from repro.ckpt.manager import (CheckpointManager, RestoreResult, latest_step,
                                 prune, restore, save)
 from repro.ckpt.manifest import LOSSY_MODES, MODES, TreeMismatchError
-from repro.ckpt.async_writer import AsyncWriter
+from repro.ckpt.async_writer import AsyncWriteError, AsyncWriter
 
 __all__ = ["save", "restore", "latest_step", "prune",
            "CheckpointManager", "RestoreResult", "AsyncWriter",
-           "TreeMismatchError", "MODES", "LOSSY_MODES"]
+           "AsyncWriteError", "TreeMismatchError", "MODES", "LOSSY_MODES"]

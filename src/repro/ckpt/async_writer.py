@@ -10,12 +10,41 @@ write finished during the intervening steps and the wait is free).
 
 Exceptions from the background write are re-raised on the NEXT ``wait()``
 / ``submit()`` so a failing disk surfaces in the step loop rather than
-being lost with the thread.
+being lost with the thread.  They arrive wrapped in :class:`AsyncWriteError`
+carrying the submit label (the checkpoint step) with the original
+exception chained as ``__cause__``, and — when obs is enabled — an error
+event lands in the registry at failure time, so a failed background save
+is attributable from the train-loop's periodic ``[obs]`` lines even
+before the next barrier.
+
+Observability (``repro.obs``, all recorded from host timestamps the
+writer already has — no device reads): ``ckpt.submit_stall_s`` histogram
+(how long ``submit`` blocked on the previous write; ~0 in steady state),
+``ckpt.write`` span on the writer thread (its own track in the Chrome
+trace), ``ckpt.queue_depth`` gauge (0/1 for the single slot).
 """
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, Optional
+
+from repro import obs
+
+
+class AsyncWriteError(RuntimeError):
+    """A background checkpoint write failed.
+
+    ``label`` identifies the submission (the manager passes
+    ``"step <N>"``); the original exception is chained as ``__cause__``.
+    """
+
+    def __init__(self, label: Optional[str], cause: BaseException) -> None:
+        where = f" ({label})" if label else ""
+        super().__init__(f"background checkpoint write failed{where}: "
+                         f"{type(cause).__name__}: {cause}")
+        self.label = label
+        self.__cause__ = cause
 
 
 class AsyncWriter:
@@ -28,15 +57,35 @@ class AsyncWriter:
     def in_flight(self) -> bool:
         return self._thread is not None and self._thread.is_alive()
 
-    def submit(self, fn: Callable[[], Any]) -> None:
-        """Run ``fn`` in the background; barriers on the previous write."""
+    def submit(self, fn: Callable[[], Any],
+               label: Optional[str] = None) -> None:
+        """Run ``fn`` in the background; barriers on the previous write.
+
+        ``label`` tags the submission for error wrapping and the obs
+        span (the checkpoint manager passes ``"step <N>"``).
+        """
+        t0 = time.perf_counter()
         self.wait()
+        if obs.enabled():
+            obs.observe("ckpt.submit_stall_s", time.perf_counter() - t0)
+            obs.counter_add("ckpt.submits", 1)
+            obs.gauge_set("ckpt.queue_depth", 1)
 
         def run() -> None:
             try:
-                self._result = fn()
+                with obs.span("ckpt.write", label=label or ""):
+                    self._result = fn()
             except BaseException as e:     # re-raised on the next wait()
-                self._exc = e
+                obs.error("ckpt.write", f"{type(e).__name__}: {e}",
+                          label=label or "")
+                # labeled submissions (the manager's "step <N>") get the
+                # attributable wrapper; bare submissions keep their
+                # original exception type
+                self._exc = (AsyncWriteError(label, e)
+                             if label and not isinstance(e, AsyncWriteError)
+                             else e)
+            finally:
+                obs.gauge_set("ckpt.queue_depth", 0)
 
         self._thread = threading.Thread(target=run, daemon=True,
                                         name="ckpt-async-writer")

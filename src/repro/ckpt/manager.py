@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ckpt import manifest as mf
 from repro.ckpt import sharded
 from repro.ckpt.async_writer import AsyncWriter
@@ -212,39 +213,50 @@ def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
     fname = mf.blob_file(jax.process_index())
     entries = []
     offset = 0
-    with open(os.path.join(tmp, fname), "wb") as f:
+    with obs.span("ckpt.write_blobs", step=step, leaves=len(snaps)), \
+            open(os.path.join(tmp, fname), "wb") as f:
         for snap in snaps:
-            shard_docs = []
-            if snap.blobs is not None:     # encoded on device at snapshot
-                emode, blobs = snap.emode, snap.blobs
-            else:
-                emode = sharded.leaf_mode(snap, mode, min_lossy)
-                blobs = sharded.encode_shards(
-                    [sh.data for sh in snap.shards], emode, eb,
-                    backend=backend)
-            for sh, blob in zip(snap.shards, blobs):
-                f.write(blob)
-                shard_docs.append({
-                    "file": fname, "offset": offset, "nbytes": len(blob),
-                    "sha256": hashlib.sha256(blob).hexdigest(),
-                    "index": [[a, b] for a, b in sh.index],
-                })
-                offset += len(blob)
-            entries.append(mf.leaf_entry(snap.name, snap.shape, snap.dtype,
-                                         emode, eb, snap.spec, shard_docs))
+            try:
+                shard_docs = []
+                if snap.blobs is not None:   # encoded on device at snapshot
+                    emode, blobs = snap.emode, snap.blobs
+                else:
+                    emode = sharded.leaf_mode(snap, mode, min_lossy)
+                    blobs = sharded.encode_shards(
+                        [sh.data for sh in snap.shards], emode, eb,
+                        backend=backend)
+                for sh, blob in zip(snap.shards, blobs):
+                    f.write(blob)
+                    shard_docs.append({
+                        "file": fname, "offset": offset,
+                        "nbytes": len(blob),
+                        "sha256": hashlib.sha256(blob).hexdigest(),
+                        "index": [[a, b] for a, b in sh.index],
+                    })
+                    offset += len(blob)
+                entries.append(mf.leaf_entry(snap.name, snap.shape,
+                                             snap.dtype, emode, eb,
+                                             snap.spec, shard_docs))
+            except Exception as e:
+                raise RuntimeError(
+                    f"checkpoint write failed at step {step}, leaf "
+                    f"{snap.name!r}: {type(e).__name__}: {e}") from e
         f.flush()
         os.fsync(f.fileno())
 
-    doc = mf.build(step, entries, mesh_shape, jax.process_count())
-    with open(os.path.join(tmp, mf.MANIFEST), "w") as f:
-        json.dump(doc, f)
-        f.flush()
-        os.fsync(f.fileno())
-    _fsync_dir(tmp)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    _fsync_dir(directory)
+    with obs.span("ckpt.commit", step=step, blob_bytes=offset):
+        doc = mf.build(step, entries, mesh_shape, jax.process_count())
+        with open(os.path.join(tmp, mf.MANIFEST), "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        _fsync_dir(directory)
+    obs.counter_add("ckpt.commits", 1)
+    obs.counter_add("ckpt.blob_bytes", float(offset))
     if keep is not None:
         prune(directory, keep)
     if log is not None:
@@ -349,17 +361,21 @@ class CheckpointManager:
                 "CheckpointManager.save is single-controller for now: "
                 "multi-process commit coordination (shared-dir barrier + "
                 "manifest merge on process 0) is not implemented")
-        snaps, mesh_shape, _ = sharded.snapshot_tree(
-            tree, mode=self.mode, eb=self.eb, backend=self.kernel_backend,
-            min_lossy=self.min_compress_size)
-        fn = functools.partial(_write_v2, self.directory, step, snaps,
-                               mesh_shape, self.mode, self.eb,
-                               self.min_compress_size, self.keep, self.log,
-                               backend=self.kernel_backend)
-        if self.async_write:
-            self._writer.submit(fn)   # barriers on the previous write only
-            return None
-        return fn()
+        with obs.span("ckpt.save", step=step, mode=self.mode):
+            with obs.span("ckpt.snapshot", step=step):
+                snaps, mesh_shape, _ = sharded.snapshot_tree(
+                    tree, mode=self.mode, eb=self.eb,
+                    backend=self.kernel_backend,
+                    min_lossy=self.min_compress_size)
+            fn = functools.partial(_write_v2, self.directory, step, snaps,
+                                   mesh_shape, self.mode, self.eb,
+                                   self.min_compress_size, self.keep,
+                                   self.log, backend=self.kernel_backend)
+            if self.async_write:
+                # barriers on the previous write only
+                self._writer.submit(fn, label=f"step {step}")
+                return None
+            return fn()
 
     def wait(self) -> Optional[str]:
         """Barrier: block until the in-flight write (if any) commits."""

@@ -78,6 +78,10 @@ class ArchConfig:
     ckpt_eb: float = 1e-4             # absolute error bound for lossy modes
     ckpt_async: bool = True           # background serialize+fsync (the step
                                       #   loop only pays the host snapshot)
+    # observability (repro.obs): zero-sync spans/counters across compress,
+    # serve, ring, and checkpoint paths; also on via REPRO_OBS=1 or
+    # launch.train --obs
+    obs: bool = False
     # costing mode (roofline): scans counted once by XLA cost analysis, so
     # the dry-run lowers small-depth UNROLLED variants and extrapolates.
     unroll_groups: bool = False

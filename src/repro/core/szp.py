@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bitpack
 from repro.kernels import ops
 from repro.utils import bitwidth, cdiv, pad_to_multiple
@@ -143,17 +144,36 @@ def _unpack_sections(parts: SZpParts, block: int):
 @functools.partial(jax.jit, static_argnames=("block", "backend"))
 def _quant_stage(x: jnp.ndarray, eb: float, block: int, backend: str):
     """Pass 1: fused QZ+LZ through kernels.ops + measured max width."""
-    xb = _blocked_field(x, block)
-    first, mags, signs, widths = ops.szp_quant(xb, eb, backend=backend)
-    return first, mags, signs, widths, widths.max()
+    with jax.named_scope("szp.stage_quant"):
+        xb = _blocked_field(x, block)
+        first, mags, signs, widths = ops.szp_quant(xb, eb, backend=backend)
+        return first, mags, signs, widths, widths.max()
 
 
 @functools.partial(jax.jit, static_argnames=("max_width", "backend"))
 def _pack_stage(first, mags, signs, widths, max_width: int,
                 backend: str) -> SZpParts:
     """Pass 2: tiled BE pack at the static capacity bucket."""
-    return _assemble_parts(first, mags, signs, widths, max_width,
-                           backend=backend)
+    with jax.named_scope("szp.stage_pack"):
+        return _assemble_parts(first, mags, signs, widths, max_width,
+                               backend=backend)
+
+
+def _obs_stream(parts: SZpParts, pipeline: str, mode: str) -> None:
+    """Static stream accounting: calls + the capacity-formula bytes.
+
+    Every number here comes from array SHAPES (aval metadata, host-known
+    without any device read), so recording it keeps the zero-sync
+    guarantee on both the classic and the resident path."""
+    if not obs.enabled():
+        return
+    batched = parts.widths.ndim == 2
+    calls = parts.widths.shape[0] if batched else 1
+    cap = (HEADER_BYTES * calls + parts.const_bits.size + parts.widths.size
+           + parts.signs.size + 4 * parts.first.size + parts.payload.size)
+    obs.counter_add(f"{pipeline}.compress.calls", calls)
+    obs.counter_add(f"{pipeline}.compress.{mode}_calls", calls)
+    obs.counter_add(f"{pipeline}.compress.cap_bytes", float(cap))
 
 
 def _bucket_index(w_max: jnp.ndarray) -> jnp.ndarray:
@@ -207,9 +227,12 @@ def _pack_switch(streams, block: int, backend: str,
 def _compress_resident(x: jnp.ndarray, eb, block: int,
                        backend: str) -> SZpParts:
     """Device-resident compress: quant + bucket select + pack, no host."""
-    xb = _blocked_field(x, block)
-    first, mags, signs, widths = ops.szp_quant(xb, eb, backend=backend)
-    (parts,) = _pack_switch(((first, mags, signs, widths),), block, backend)
+    with jax.named_scope("szp.stage_quant"):
+        xb = _blocked_field(x, block)
+        first, mags, signs, widths = ops.szp_quant(xb, eb, backend=backend)
+    with jax.named_scope("szp.stage_pack"):
+        (parts,) = _pack_switch(((first, mags, signs, widths),), block,
+                                backend)
     return parts
 
 
@@ -249,14 +272,25 @@ def szp_compress(x: jnp.ndarray, eb, block: int = DEFAULT_BLOCK,
     """
     backend = ops.resolve_backend(backend)
     if resident:
-        if donate:
-            with _quiet_donation():
-                return _compress_resident_donated(x, eb, block=block,
-                                                  backend=backend)
-        return _compress_resident_jit(x, eb, block=block, backend=backend)
-    first, mags, signs, widths, w_max = _quant_stage(x, eb, block, backend)
-    mw = bitpack.width_bucket(int(w_max))
-    return _pack_stage(first, mags, signs, widths, mw, backend)
+        with obs.span("compress.resident", pipeline="szp", backend=backend):
+            if donate:
+                with _quiet_donation():
+                    parts = _compress_resident_donated(x, eb, block=block,
+                                                       backend=backend)
+            else:
+                parts = _compress_resident_jit(x, eb, block=block,
+                                               backend=backend)
+        _obs_stream(parts, "szp", "resident")
+        return parts
+    with obs.span("compress.quant", pipeline="szp", backend=backend):
+        first, mags, signs, widths, w_max = _quant_stage(x, eb, block,
+                                                         backend)
+        mw = bitpack.width_bucket(int(w_max))   # the existing sync point
+    with obs.span("compress.pack", pipeline="szp", width_bucket=mw):
+        parts = _pack_stage(first, mags, signs, widths, mw, backend)
+    _obs_stream(parts, "szp", "classic")
+    obs.counter_add(f"szp.compress.bucket_{mw}", 1)
+    return parts
 
 
 @functools.partial(jax.jit,
@@ -264,14 +298,15 @@ def szp_compress(x: jnp.ndarray, eb, block: int = DEFAULT_BLOCK,
 def _dequant_stage(parts: SZpParts, n: int, eb: float, block: int,
                    recon: str, backend: str) -> jnp.ndarray:
     """BE^ -> LZ^+B^ -> QZ^ through kernels.ops -> (n,) float32."""
-    mags, signs, _ = _unpack_sections(parts, block)
-    out = ops.szp_dequant(parts.first, mags, signs[:, 1:], eb,
-                          backend=backend)
-    if recon == "left":
-        out = out - eb
-    elif recon != "center":
-        raise ValueError(f"unknown recon mode: {recon}")
-    return out.reshape(-1)[:n]
+    with jax.named_scope("szp.stage_restore"):
+        mags, signs, _ = _unpack_sections(parts, block)
+        out = ops.szp_dequant(parts.first, mags, signs[:, 1:], eb,
+                              backend=backend)
+        if recon == "left":
+            out = out - eb
+        elif recon != "center":
+            raise ValueError(f"unknown recon mode: {recon}")
+        return out.reshape(-1)[:n]
 
 
 def tri_guard_width(block: int) -> int:
@@ -314,7 +349,9 @@ def szp_decompress(parts: SZpParts, shape: Sequence[int], eb,
     n = 1
     for s in shape:
         n *= s
-    out = _dequant_guarded(parts, n, eb, block, recon, backend)
+    with obs.span("decompress.restore", pipeline="szp", backend=backend):
+        out = _dequant_guarded(parts, n, eb, block, recon, backend)
+    obs.counter_add("szp.decompress.calls", 1)
     return out.reshape(shape)
 
 
@@ -384,17 +421,28 @@ def szp_compress_batch(xs: jnp.ndarray, eb,
         raise ValueError(f"expected (N, ...) stacked fields, got {xs.shape}")
     backend = ops.resolve_backend(backend)
     if resident:
-        if donate:
-            with _quiet_donation():
-                return _compress_resident_batch_donated(
-                    xs, eb, block=block, backend=backend)
-        return _compress_resident_batch_jit(xs, eb, block=block,
-                                            backend=backend)
-    first, mags, signs, widths, w_max = _quant_stage_batch(
-        xs, eb, block=block, backend=backend)
-    mw = bitpack.width_bucket(int(w_max))
-    return _pack_stage_batch(first, mags, signs, widths, max_width=mw,
-                             backend=backend)
+        with obs.span("compress.resident", pipeline="szp", backend=backend,
+                      batch=xs.shape[0]):
+            if donate:
+                with _quiet_donation():
+                    parts = _compress_resident_batch_donated(
+                        xs, eb, block=block, backend=backend)
+            else:
+                parts = _compress_resident_batch_jit(xs, eb, block=block,
+                                                     backend=backend)
+        _obs_stream(parts, "szp", "resident")
+        return parts
+    with obs.span("compress.quant", pipeline="szp", backend=backend,
+                  batch=xs.shape[0]):
+        first, mags, signs, widths, w_max = _quant_stage_batch(
+            xs, eb, block=block, backend=backend)
+        mw = bitpack.width_bucket(int(w_max))
+    with obs.span("compress.pack", pipeline="szp", width_bucket=mw):
+        parts = _pack_stage_batch(first, mags, signs, widths, max_width=mw,
+                                  backend=backend)
+    _obs_stream(parts, "szp", "classic")
+    obs.counter_add(f"szp.compress.bucket_{mw}", xs.shape[0])
+    return parts
 
 
 @functools.partial(jax.jit,
@@ -432,8 +480,11 @@ def szp_decompress_batch(parts: SZpParts, shape: Sequence[int], eb,
     n = 1
     for s in shape:
         n *= s
-    out = _dequant_guarded_batch(parts, n=n, eb=eb, block=block, recon=recon,
-                                 backend=backend)
+    with obs.span("decompress.restore", pipeline="szp", backend=backend,
+                  batch=parts.widths.shape[0]):
+        out = _dequant_guarded_batch(parts, n=n, eb=eb, block=block,
+                                     recon=recon, backend=backend)
+    obs.counter_add("szp.decompress.calls", parts.widths.shape[0])
     return out.reshape((parts.widths.shape[0],) + tuple(shape))
 
 

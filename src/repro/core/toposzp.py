@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bitpack
 from repro.core.guarantees import enforce_no_fp_ft
 from repro.core.quantize import quantize
@@ -97,22 +98,25 @@ def _compress_measure(field: jnp.ndarray, eb: float, block: int,
     codes = quantize(field, eb)
 
     # --- CD + RP (the lightweight topology stage, before lossy QZ) ---
-    labels = ops.cp_detect(field, backend=backend)
-    ranks = compute_ranks(field, labels, codes)
+    with jax.named_scope("toposzp.stage_detect"):
+        labels = ops.cp_detect(field, backend=backend)
+        ranks = compute_ranks(field, labels, codes)
 
     # --- QZ + LZ fused over (B, K) blocks ---
-    first, mags, signs, widths = ops.szp_quant(
-        _blocked_field(field, block), eb, backend=backend)
+    with jax.named_scope("toposzp.stage_quant"):
+        first, mags, signs, widths = ops.szp_quant(
+            _blocked_field(field, block), eb, backend=backend)
 
-    # --- metadata sections ---
-    labels_flat = labels.reshape(-1)
-    labels2b = bitpack.pack_2bit(labels_flat)
-    n_cp = (labels_flat != 0).sum().astype(jnp.int32)
-    dest = _cp_first_dest(labels_flat)
-    ranks_sorted = jnp.zeros(labels_flat.shape[0], jnp.int32).at[dest].set(
-        ranks.reshape(-1), unique_indices=True)   # CP ranks first, zeros after
-    rfirst, rmags, rsigns, rwidths = _delta_blocks(
-        _blocked_codes(ranks_sorted, block))
+        # --- metadata sections ---
+        labels_flat = labels.reshape(-1)
+        labels2b = bitpack.pack_2bit(labels_flat)
+        n_cp = (labels_flat != 0).sum().astype(jnp.int32)
+        dest = _cp_first_dest(labels_flat)
+        ranks_sorted = jnp.zeros(labels_flat.shape[0],
+                                 jnp.int32).at[dest].set(
+            ranks.reshape(-1), unique_indices=True)   # CP ranks first
+        rfirst, rmags, rsigns, rwidths = _delta_blocks(
+            _blocked_codes(ranks_sorted, block))
     return ((first, mags, signs, widths), (rfirst, rmags, rsigns, rwidths),
             labels2b, n_cp, widths.max(), rwidths.max())
 
@@ -141,12 +145,13 @@ def _pack_streams(main, rank, labels2b, n_cp, block: int, mw_main: int,
         szp_parts = _assemble_parts(*args[0], mw_main, backend=backend)
         rank_parts = _assemble_parts(*args[1], mw_rank, backend=backend)
         return szp_parts, rank_parts
-    if batched:
-        szp_parts, rank_parts = jax.vmap(pack)((main, rank))
-        labels_bytes = labels2b.shape[1]
-    else:
-        szp_parts, rank_parts = pack((main, rank))
-        labels_bytes = labels2b.shape[0]
+    with jax.named_scope("toposzp.stage_pack"):
+        if batched:
+            szp_parts, rank_parts = jax.vmap(pack)((main, rank))
+            labels_bytes = labels2b.shape[1]
+        else:
+            szp_parts, rank_parts = pack((main, rank))
+            labels_bytes = labels2b.shape[0]
     nbytes = (szp_parts.nbytes + labels_bytes
               + rank_stream_bytes(n_cp, rank_parts.payload_nbytes, block))
     return TopoSZpCompressed(szp_parts, labels2b, rank_parts, n_cp,
@@ -162,7 +167,8 @@ def _compress_resident_topo(field: jnp.ndarray, eb, block: int,
     to the per-stream-bucket classic pack."""
     main, rank, labels2b, n_cp, _, _ = _compress_measure(
         field, eb, block, backend)
-    szp_parts, rank_parts = _pack_switch((main, rank), block, backend)
+    with jax.named_scope("toposzp.stage_pack"):
+        szp_parts, rank_parts = _pack_switch((main, rank), block, backend)
     nbytes = (szp_parts.nbytes + labels2b.shape[0]
               + rank_stream_bytes(n_cp, rank_parts.payload_nbytes, block))
     return TopoSZpCompressed(szp_parts, labels2b, rank_parts, n_cp,
@@ -175,8 +181,9 @@ def _compress_resident_topo_batch(fields: jnp.ndarray, eb, block: int,
     outside the vmap; one shared bucket for the whole batch)."""
     main, rank, labels2b, n_cp, _, _ = jax.vmap(
         lambda f: _compress_measure(f, eb, block, backend))(fields)
-    szp_parts, rank_parts = _pack_switch((main, rank), block, backend,
-                                         batched=True)
+    with jax.named_scope("toposzp.stage_pack"):
+        szp_parts, rank_parts = _pack_switch((main, rank), block, backend,
+                                             batched=True)
     nbytes = (szp_parts.nbytes + labels2b.shape[1]
               + rank_stream_bytes(n_cp, rank_parts.payload_nbytes, block))
     return TopoSZpCompressed(szp_parts, labels2b, rank_parts, n_cp,
@@ -195,6 +202,28 @@ _topo_resident_batch_donated = jax.jit(
     donate_argnums=(0,))
 
 
+def _obs_topo_stream(comp: TopoSZpCompressed, mode: str) -> None:
+    """Static stream accounting: calls + the capacity-formula bytes over
+    both bitpacked streams and the label map.  Every number comes from
+    array SHAPES (aval metadata, host-known without any device read), so
+    recording it keeps the zero-sync guarantee on both the classic and
+    the resident path."""
+    if not obs.enabled():
+        return
+    batched = comp.szp.widths.ndim == 2
+    calls = comp.szp.widths.shape[0] if batched else 1
+
+    def cap(parts: SZpParts) -> int:
+        return (HEADER_BYTES * calls + parts.const_bits.size
+                + parts.widths.size + parts.signs.size
+                + 4 * parts.first.size + parts.payload.size)
+
+    total = cap(comp.szp) + cap(comp.ranks) + comp.labels2b.size
+    obs.counter_add("toposzp.compress.calls", calls)
+    obs.counter_add(f"toposzp.compress.{mode}_calls", calls)
+    obs.counter_add("toposzp.compress.cap_bytes", float(total))
+
+
 def toposzp_compress(field: jnp.ndarray, eb,
                      block: int = DEFAULT_BLOCK,
                      backend: Optional[str] = None, resident: bool = False,
@@ -207,19 +236,33 @@ def toposzp_compress(field: jnp.ndarray, eb,
     path; ``donate=True`` (resident only) donates the field's buffer."""
     backend = ops.resolve_backend(backend)
     if resident:
-        if donate:
-            with _quiet_donation():
-                return _topo_resident_donated(field, eb, block=block,
-                                              backend=backend)
-        return _topo_resident_jit(field, eb, block=block, backend=backend)
-    main, rank, labels2b, n_cp, w_max, rw_max = _measure_one(
-        field, eb, block=block, backend=backend)
-    # one blocking read for both width maxes
-    wm, rwm = np.asarray(jnp.stack([w_max, rw_max]))
-    return _pack_streams(main, rank, labels2b, n_cp, block=block,
-                         mw_main=bitpack.width_bucket(int(wm)),
-                         mw_rank=bitpack.width_bucket(int(rwm)),
-                         backend=backend)
+        with obs.span("compress.resident", pipeline="toposzp",
+                      backend=backend):
+            if donate:
+                with _quiet_donation():
+                    comp = _topo_resident_donated(field, eb, block=block,
+                                                  backend=backend)
+            else:
+                comp = _topo_resident_jit(field, eb, block=block,
+                                          backend=backend)
+        _obs_topo_stream(comp, "resident")
+        return comp
+    with obs.span("compress.quant", pipeline="toposzp", backend=backend,
+                  includes="detect+quant"):
+        main, rank, labels2b, n_cp, w_max, rw_max = _measure_one(
+            field, eb, block=block, backend=backend)
+        # one blocking read for both width maxes
+        wm, rwm = np.asarray(jnp.stack([w_max, rw_max]))
+        mw_main = bitpack.width_bucket(int(wm))
+        mw_rank = bitpack.width_bucket(int(rwm))
+    with obs.span("compress.pack", pipeline="toposzp",
+                  width_bucket=mw_main, rank_bucket=mw_rank):
+        comp = _pack_streams(main, rank, labels2b, n_cp, block=block,
+                             mw_main=mw_main, mw_rank=mw_rank,
+                             backend=backend)
+    _obs_topo_stream(comp, "classic")
+    obs.counter_add(f"toposzp.compress.bucket_{mw_main}", 1)
+    return comp
 
 
 def toposzp_compress_batch(fields: jnp.ndarray, eb,
@@ -242,19 +285,32 @@ def toposzp_compress_batch(fields: jnp.ndarray, eb,
         raise ValueError(f"expected (N, ny, nx) fields, got {fields.shape}")
     backend = ops.resolve_backend(backend)
     if resident:
-        if donate:
-            with _quiet_donation():
-                return _topo_resident_batch_donated(fields, eb, block=block,
-                                                    backend=backend)
-        return _topo_resident_batch_jit(fields, eb, block=block,
-                                        backend=backend)
-    main, rank, labels2b, n_cp, w_max, rw_max = _measure_batch(
-        fields, eb, block=block, backend=backend)
-    wm, rwm = np.asarray(jnp.stack([w_max, rw_max]))
-    return _pack_streams(main, rank, labels2b, n_cp, block=block,
-                         mw_main=bitpack.width_bucket(int(wm)),
-                         mw_rank=bitpack.width_bucket(int(rwm)),
-                         backend=backend, batched=True)
+        with obs.span("compress.resident", pipeline="toposzp",
+                      backend=backend, batch=fields.shape[0]):
+            if donate:
+                with _quiet_donation():
+                    comp = _topo_resident_batch_donated(
+                        fields, eb, block=block, backend=backend)
+            else:
+                comp = _topo_resident_batch_jit(fields, eb, block=block,
+                                                backend=backend)
+        _obs_topo_stream(comp, "resident")
+        return comp
+    with obs.span("compress.quant", pipeline="toposzp", backend=backend,
+                  includes="detect+quant", batch=fields.shape[0]):
+        main, rank, labels2b, n_cp, w_max, rw_max = _measure_batch(
+            fields, eb, block=block, backend=backend)
+        wm, rwm = np.asarray(jnp.stack([w_max, rw_max]))
+        mw_main = bitpack.width_bucket(int(wm))
+        mw_rank = bitpack.width_bucket(int(rwm))
+    with obs.span("compress.pack", pipeline="toposzp",
+                  width_bucket=mw_main, rank_bucket=mw_rank):
+        comp = _pack_streams(main, rank, labels2b, n_cp, block=block,
+                             mw_main=mw_main, mw_rank=mw_rank,
+                             backend=backend, batched=True)
+    _obs_topo_stream(comp, "classic")
+    obs.counter_add(f"toposzp.compress.bucket_{mw_main}", fields.shape[0])
+    return comp
 
 
 def batch_slice(comp: TopoSZpCompressed, i: int) -> TopoSZpCompressed:
@@ -327,10 +383,12 @@ def _decode_field(comp: TopoSZpCompressed, shape, eb: float, block: int,
 def _restore_field(base, labels, ranks, eb: float, rbf_mode: str,
                    backend: str):
     """CP^+RP^ -> RS^ -> FP/FT suppression for one decoded field."""
-    ext, _ = apply_extrema_stencils(base, labels, ranks, eb, backend=backend)
-    ref, _ = refine_saddles(ext, labels, eb, rbf_mode=rbf_mode,
-                            backend=backend)
-    out, _ = enforce_no_fp_ft(base, ref, labels)
+    with jax.named_scope("toposzp.stage_restore"):
+        ext, _ = apply_extrema_stencils(base, labels, ranks, eb,
+                                        backend=backend)
+        ref, _ = refine_saddles(ext, labels, eb, rbf_mode=rbf_mode,
+                                backend=backend)
+        out, _ = enforce_no_fp_ft(base, ref, labels)
     return out
 
 
@@ -387,8 +445,12 @@ def toposzp_decompress(comp: TopoSZpCompressed, shape: Sequence[int],
       * zero FP, zero FT w.r.t. the original label map
     """
     backend = ops.resolve_backend(backend)
-    return _decompress_one(comp, eb, shape=tuple(shape), block=block,
-                           rbf_mode=rbf_mode, recon=recon, backend=backend)
+    with obs.span("decompress.restore", pipeline="toposzp", backend=backend):
+        out = _decompress_one(comp, eb, shape=tuple(shape), block=block,
+                              rbf_mode=rbf_mode, recon=recon,
+                              backend=backend)
+    obs.counter_add("toposzp.decompress.calls", 1)
+    return out
 
 
 def toposzp_decompress_batch(comp: TopoSZpCompressed, shape: Sequence[int],
@@ -400,8 +462,14 @@ def toposzp_decompress_batch(comp: TopoSZpCompressed, shape: Sequence[int],
     per-field :func:`toposzp_decompress` calls.  Device-resident (in-graph
     dequant guard, no host syncs)."""
     backend = ops.resolve_backend(backend)
-    return _decompress_batch(comp, eb, shape=tuple(shape), block=block,
-                             rbf_mode=rbf_mode, recon=recon, backend=backend)
+    nb = comp.szp.widths.shape[0]
+    with obs.span("decompress.restore", pipeline="toposzp", backend=backend,
+                  batch=nb):
+        out = _decompress_batch(comp, eb, shape=tuple(shape), block=block,
+                                rbf_mode=rbf_mode, recon=recon,
+                                backend=backend)
+    obs.counter_add("toposzp.decompress.calls", nb)
+    return out
 
 
 def toposzp_roundtrip(field: jnp.ndarray, eb: float,

@@ -48,6 +48,7 @@ from typing import Any, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.quantize import dequantize, quantize
 from repro.utils import bitwidth
 
@@ -327,6 +328,27 @@ def _psum_leaf(g: jnp.ndarray, e: Optional[jnp.ndarray],
     return gbar.astype(g.dtype), new_e.reshape(g.shape)
 
 
+def _obs_int32_wire(sizes: Sequence[int], axes: Tuple[str, ...],
+                    rel_eb: float, topo_frac: float) -> None:
+    """Trace-time static wire model of the int32-code psum, recorded as
+    last-write gauges (``_psum_tree`` executes once per trace, so
+    counters would count compilations, not steps — which is exactly what
+    ``collectives.traces`` does count)."""
+    if not obs.enabled():
+        return
+    n = int(jax.lax.psum(1, axes))
+    widen = 2.0 if n * max_code(rel_eb) > INT32_MAX else 1.0
+    sizes = [s for s in sizes if s > 0]
+    side = sum(sidecar_bits(s, topo_frac, n) for s in sizes) / 8.0
+    obs.gauge_set("collectives.n_members", n)
+    obs.gauge_set("collectives.leaves", len(sizes))
+    obs.gauge_set("collectives.elems_per_step", sum(sizes))
+    obs.gauge_set("collectives.int32_body_bytes_per_step",
+                  4.0 * sum(sizes) * widen)
+    obs.gauge_set("collectives.sidecar_bytes_per_step", side)
+    obs.counter_add("collectives.traces", 1)
+
+
 def _psum_tree(grads: Any, axes: AxisNames, rel_eb: float,
                err: Optional[Any], topo_frac: float,
                wire_format: str = "int32") -> Tuple[Any, Any]:
@@ -339,6 +361,7 @@ def _psum_tree(grads: Any, axes: AxisNames, rel_eb: float,
         return packed_psum_tree(grads, axes, rel_eb, err, topo_frac)
     n = jax.lax.psum(jnp.ones((), jnp.float32), axes)
     leaves_g, treedef = jax.tree.flatten(grads)
+    _obs_int32_wire([g.size for g in leaves_g], axes, rel_eb, topo_frac)
     leaves_e = ([None] * len(leaves_g) if err is None
                 else jax.tree.leaves(err))
     pairs = [_psum_leaf(g, e, axes, n, rel_eb, topo_frac)

@@ -44,6 +44,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.bitpack import (pack_bits, sum_width, unpack_bits,
                                 unpack_blocks)
 from repro.core.quantize import dequantize, quantize
@@ -189,42 +190,66 @@ def ring_allreduce_codes(
     msg = q                                   # partial sum, 1 member so far
     vmsg = side_vals                          # circulating originals
     for h in range(1, n):
-        w_cap = sum_width(w0, h)              # static per-hop width bound
-        mag_cap = b_blocks * cdiv(block_k * w_cap, 8)
-        mags = jnp.abs(msg).astype(jnp.uint32).reshape(b_blocks, block_k)
-        widths = bitwidth(mags.max(axis=1))   # (B,) dynamic, <= w_cap
-        local = ops.local_pack(mags, widths, max_width=w_cap,
-                               backend=backend)
-        buf, _, total = ops.compact_bytes(local, widths, block_k,
-                                          backend=backend)
-        signs = pack_bits((msg < 0).astype(jnp.uint32))
-        parts = [buf, signs, widths.astype(jnp.uint8)]
-        if vmsg is not None:
-            parts.append(_f32_to_bytes(vmsg))
-        payload = jnp.concatenate(parts)
-        valid = valid + (total.astype(jnp.float32)
-                         + jnp.float32(sign_bytes + b_blocks + 4 * u))
+        with jax.named_scope(f"ring.hop{h}"):
+            w_cap = sum_width(w0, h)          # static per-hop width bound
+            mag_cap = b_blocks * cdiv(block_k * w_cap, 8)
+            mags = jnp.abs(msg).astype(jnp.uint32).reshape(b_blocks, block_k)
+            widths = bitwidth(mags.max(axis=1))   # (B,) dynamic, <= w_cap
+            local = ops.local_pack(mags, widths, max_width=w_cap,
+                                   backend=backend)
+            buf, _, total = ops.compact_bytes(local, widths, block_k,
+                                              backend=backend)
+            signs = pack_bits((msg < 0).astype(jnp.uint32))
+            parts = [buf, signs, widths.astype(jnp.uint8)]
+            if vmsg is not None:
+                parts.append(_f32_to_bytes(vmsg))
+            payload = jnp.concatenate(parts)
+            valid = valid + (total.astype(jnp.float32)
+                             + jnp.float32(sign_bytes + b_blocks + 4 * u))
 
-        payload = jax.lax.ppermute(payload, axis, perm)
+            payload = jax.lax.ppermute(payload, axis, perm)
 
-        o_sign = mag_cap
-        o_width = o_sign + sign_bytes
-        o_val = o_width + b_blocks
-        rwidths = payload[o_width:o_val].astype(jnp.int32)
-        rmags = unpack_blocks(payload[:mag_cap], rwidths, block_k).reshape(-1)
-        rsigns = unpack_bits(payload[o_sign:o_width], p)
-        rcodes = jnp.where(rsigns == 1, -rmags.astype(jnp.int32),
-                           rmags.astype(jnp.int32))
-        msg = rcodes + q                      # received h members + own
-        if vmsg is not None:
-            vmsg = _bytes_to_f32(payload[o_val:o_val + 4 * u])
-            vout = vout.at[(i - h) % n].set(vmsg)
+            o_sign = mag_cap
+            o_width = o_sign + sign_bytes
+            o_val = o_width + b_blocks
+            rwidths = payload[o_width:o_val].astype(jnp.int32)
+            rmags = unpack_blocks(payload[:mag_cap], rwidths,
+                                  block_k).reshape(-1)
+            rsigns = unpack_bits(payload[o_sign:o_width], p)
+            rcodes = jnp.where(rsigns == 1, -rmags.astype(jnp.int32),
+                               rmags.astype(jnp.int32))
+            msg = rcodes + q                  # received h members + own
+            if vmsg is not None:
+                vmsg = _bytes_to_f32(payload[o_val:o_val + 4 * u])
+                vout = vout.at[(i - h) % n].set(vmsg)
     return msg, vout, valid
 
 
 # --------------------------------------------------------------------------
 # tree-level packed psum (bucketed leaf batching)
 # --------------------------------------------------------------------------
+
+def _obs_wire(sizes: List[int], rel_eb: float, topo_frac: float, n: int,
+              block_k: int, bucket_elems: int) -> None:
+    """Trace-time wire accounting: absorb the static
+    :func:`packed_wire_summary` model into the obs registry.
+
+    ``packed_psum_tree`` executes ONCE per trace (inside shard_map/jit),
+    never per step, so these must be last-write-wins GAUGES — an
+    accumulating counter would record trace counts, not wire bytes.  The
+    one true counter here (``ring.traces``) counts exactly that:
+    compilations of the packed wire."""
+    if not obs.enabled():
+        return
+    s = packed_wire_summary(sizes, rel_eb, topo_frac, n, block_k=block_k,
+                            bucket_elems=bucket_elems)
+    for k in ("n_members", "hops", "base_width_bits",
+              "packed_bytes_per_hop", "packed_bytes_per_step",
+              "sidecar_idx_bytes", "sidecar_val_bytes",
+              "int32_bytes_per_hop", "int32_bytes_per_step",
+              "packed_vs_int32_per_hop"):
+        obs.gauge_set(f"ring.{k}", float(s[k]))
+    obs.counter_add("ring.traces", 1)
 
 def _bucket_leaves(sizes: List[int], bucket_elems: int) -> List[List[int]]:
     """Group leaf indices so each bucket packs ~bucket_elems values."""
@@ -281,6 +306,9 @@ def packed_psum_tree(grads: Any, axes: Sequence[str], rel_eb: float,
             out[li] = (g, jnp.zeros(g.shape, jnp.float32))
         else:
             work.append(li)
+
+    _obs_wire([leaves_g[li].size for li in work], rel_eb, topo_frac, n,
+              block_k, bucket_elems)
 
     for bucket in _bucket_leaves([leaves_g[li].size for li in work],
                                  bucket_elems):

@@ -13,6 +13,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.ckpt import CheckpointManager
 from repro.data import token_batches
 from repro.dist.compat import HAS_PARTIAL_AUTO
@@ -66,10 +67,24 @@ def main():
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable repro.obs (zero-sync spans/counters; "
+                         "periodic [obs] lines every log_every steps); "
+                         "also on via REPRO_OBS=1 or cfg.obs")
+    ap.add_argument("--obs-trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON (open at "
+                         "ui.perfetto.dev) on exit; implies --obs")
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="stream obs span/error events to PATH as JSON "
+                         "lines; implies --obs")
     args = ap.parse_args()
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
+    if args.obs or args.obs_trace or args.obs_jsonl or cfg.obs:
+        obs.enable()
+    if args.obs_jsonl:
+        obs.configure(jsonl=args.obs_jsonl)
     mesh = None
     if args.data_parallel * args.model_parallel > 1:
         mesh = make_test_mesh(args.data_parallel, args.model_parallel)
@@ -120,6 +135,11 @@ def main():
     print(f"[train] done: loss {report.losses[0]:.4f} -> "
           f"{report.losses[-1]:.4f} over {report.steps_run} steps; "
           f"stragglers={len(report.straggler_events)}")
+    if obs.enabled():
+        print("[obs] " + obs.summary_line())
+        if args.obs_trace:
+            print(f"[obs] chrome trace -> "
+                  f"{obs.export_chrome_trace(args.obs_trace)}")
 
 
 class _nullcontext:

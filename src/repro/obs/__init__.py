@@ -1,0 +1,98 @@
+"""``repro.obs`` — zero-sync tracing, counters, and profile export.
+
+Runtime visibility for every production path (compress/decompress
+stages, the packed ring wire, the serve engine, the async checkpoint
+writer) under one hard constraint: instrumentation must add **zero**
+host syncs on the hot paths (PR 7's ``transfer_guard`` and
+``d2h_bytes_per_compress`` gates stay green with obs enabled).  Metrics
+are therefore either trace-time/static (shapes, widths, bucket choices,
+byte formulas) or host values read back at EXISTING sync points (end of
+a serve sweep, the classic compressor's width read, the checkpoint
+writer's commit).
+
+Enable with the ``REPRO_OBS=1`` env var, ``ArchConfig.obs``, ``launch.
+train --obs``, or :func:`enable`.  Disabled (the default), every entry
+point short-circuits on one flag read — no allocation, no lock.
+
+Surfaces:
+
+  * :func:`span` — structured wall-clock phases with nesting (bridged to
+    ``jax.profiler.TraceAnnotation`` so XLA profiles show them);
+  * :func:`counter_add` / :func:`gauge_set` / :func:`observe` — low-
+    overhead counters, last-write gauges, streaming histograms;
+  * :func:`snapshot` / :func:`summary_line` — pull-style reads (the
+    train loop's periodic ``[obs]`` lines, the serve report);
+  * :func:`export_chrome_trace` / :func:`export_jsonl` /
+    :func:`configure` — Perfetto trace files and JSONL event sinks.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+from repro.obs.export import (chrome_trace_doc, export_chrome_trace,
+                              export_jsonl)
+from repro.obs.registry import (Registry, default_registry, disable, enable,
+                                enabled, set_enabled)
+from repro.obs.spans import NULL_SPAN, Span, span
+
+__all__ = [
+    "Registry", "Span", "NULL_SPAN", "span", "enabled", "enable", "disable",
+    "set_enabled", "default_registry", "counter_add", "gauge_set", "observe",
+    "error", "snapshot", "summary_line", "events", "reset", "configure",
+    "chrome_trace_doc", "export_chrome_trace", "export_jsonl",
+]
+
+
+def counter_add(name: str, value: float = 1.0) -> None:
+    """Add to a monotonic counter (no-op when disabled)."""
+    if enabled():
+        default_registry().counter_add(name, value)
+
+
+def gauge_set(name: str, value: float) -> None:
+    """Set a last-write-wins gauge (no-op when disabled)."""
+    if enabled():
+        default_registry().gauge_set(name, value)
+
+
+def observe(name: str, value: float) -> None:
+    """Feed one sample into a streaming histogram (no-op when disabled)."""
+    if enabled():
+        default_registry().observe(name, value)
+
+
+def error(name: str, message: str, **attrs: Any) -> None:
+    """Record an error event + ``<name>.errors`` counter (no-op when
+    disabled)."""
+    if enabled():
+        default_registry().error(name, message, **attrs)
+
+
+def snapshot() -> dict:
+    """Pull-style read of all counters/gauges/histograms recorded so far."""
+    return default_registry().snapshot()
+
+
+def summary_line(prefixes: Optional[Sequence[str]] = None) -> str:
+    """Compact one-line ``k=v`` report (the train loop's ``[obs]`` line)."""
+    return default_registry().summary_line(prefixes)
+
+
+def events() -> list:
+    """All buffered span/error events (Chrome-trace-shaped dicts)."""
+    return default_registry().events()
+
+
+def reset() -> None:
+    """Clear every metric and event (tests / bench isolation)."""
+    default_registry().reset()
+
+
+def configure(jsonl: Optional[str] = None,
+              enable_obs: Optional[bool] = None) -> None:
+    """Process-level obs setup: optionally flip the enable flag and/or
+    open a streaming JSONL event sink."""
+    if enable_obs is not None:
+        set_enabled(enable_obs)
+    if jsonl is not None:
+        default_registry().open_jsonl(jsonl)

@@ -1,0 +1,74 @@
+"""Profile export: Chrome-trace (Perfetto) files and JSONL event dumps.
+
+``export_chrome_trace(path)`` writes the registry's span events in the
+Chrome ``trace_event`` JSON format — open the file at https://ui.perfetto
+.dev (or chrome://tracing) to see the span timeline: one track per
+thread (the step loop and the checkpoint writer thread land on separate
+tracks), span nesting rendered as stacked slices, counters appended as a
+final metadata event.
+
+``export_jsonl(path)`` dumps the buffered events one JSON object per
+line (the streaming alternative is ``repro.obs.configure(jsonl=...)``,
+which mirrors events to a sink file as they complete).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+from repro.obs import registry as _reg
+
+
+def _thread_meta(pid: int, tids) -> list:
+    """Thread-name metadata events so Perfetto labels the tracks."""
+    main = threading.main_thread().ident
+    out = []
+    for i, tid in enumerate(sorted(tids)):
+        name = "main" if tid == main else f"thread-{i}"
+        out.append({"name": "thread_name", "ph": "M", "pid": pid,
+                    "tid": tid, "args": {"name": name}})
+    return out
+
+
+def chrome_trace_doc(reg: Optional[_reg.Registry] = None) -> dict:
+    """Build the ``{"traceEvents": [...]}`` document in memory."""
+    reg = reg if reg is not None else _reg.default_registry()
+    events = reg.events()
+    snap = reg.snapshot()
+    pids = {ev.get("pid", os.getpid()) for ev in events} or {os.getpid()}
+    tids = {ev.get("tid", 0) for ev in events}
+    meta = []
+    for pid in pids:
+        meta.extend(_thread_meta(pid, tids))
+    return {
+        "traceEvents": meta + events,
+        "displayTimeUnit": "ms",
+        "otherData": {"counters": snap["counters"],
+                      "gauges": snap["gauges"]},
+    }
+
+
+def export_chrome_trace(path: str,
+                        reg: Optional[_reg.Registry] = None) -> str:
+    """Write a Perfetto-loadable Chrome trace file; returns ``path``."""
+    doc = chrome_trace_doc(reg)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    return path
+
+
+def export_jsonl(path: str, reg: Optional[_reg.Registry] = None) -> str:
+    """Dump all buffered events as JSON lines; returns ``path``."""
+    reg = reg if reg is not None else _reg.default_registry()
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        for ev in reg.events():
+            f.write(json.dumps(ev) + "\n")
+    return path

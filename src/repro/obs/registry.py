@@ -1,0 +1,249 @@
+"""Zero-sync observability registry: counters, gauges, histograms, spans.
+
+One process-wide :class:`Registry` (module-level default) collects
+
+  * **counters** — monotonic adds (``counter_add``);
+  * **gauges** — last-write-wins scalars (``gauge_set``), the shape
+    trace-time wire models record (a traced-once function must not
+    accumulate per-execution values it cannot see);
+  * **histograms** — streaming count/sum/min/max/last (``observe``);
+  * **span events** — Chrome-trace-ready complete events with per-thread
+    nesting depth, recorded by :mod:`repro.obs.spans`.
+
+The hard constraint (PR 7's zero-sync guarantee) is enforced by POLICY,
+not mechanism: nothing in this module touches a device value — every
+recorded number is a host float the caller already had, either
+trace-time/static (shapes, widths, byte formulas) or read back at an
+existing sync point (end of a serve sweep, the checkpoint writer's
+commit, the classic compressor's width read).  Instrumented hot paths
+therefore add **zero** host syncs, and the disabled path short-circuits
+before building any event (``enabled()`` is one attribute read).
+
+Thread-safety: every mutation takes the registry lock — the checkpoint
+async writer records spans from its daemon thread concurrently with the
+step loop.  Nesting depth is tracked per thread (``threading.local``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, IO, List, Optional, Sequence
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+MAX_EVENTS = 200_000        # span-event ring bound; overflow counts as drops
+
+
+def _env_enabled() -> bool:
+    return os.environ.get("REPRO_OBS", "0").strip().lower() in _TRUTHY
+
+
+class _Hist:
+    """Streaming histogram summary (no buckets: count/sum/min/max/last)."""
+
+    __slots__ = ("count", "total", "vmin", "vmax", "last")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self.last = 0.0
+
+    def add(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self.vmin = v if v < self.vmin else self.vmin
+        self.vmax = v if v > self.vmax else self.vmax
+        self.last = v
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count, "sum": self.total,
+                "min": self.vmin if self.count else 0.0,
+                "max": self.vmax if self.count else 0.0,
+                "mean": self.total / self.count if self.count else 0.0,
+                "last": self.last}
+
+
+class Registry:
+    """Thread-safe metric + span-event store."""
+
+    def __init__(self, max_events: int = MAX_EVENTS) -> None:
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+        self.max_events = max_events
+        self._origin = time.perf_counter()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+        self._hists: Dict[str, _Hist] = {}
+        self._events: List[Dict[str, Any]] = []
+        self._dropped = 0
+        self._sink: Optional[IO[str]] = None
+        self._sink_path: Optional[str] = None
+
+    # -- time base ----------------------------------------------------------
+
+    def now_us(self) -> float:
+        """Microseconds since this registry's origin (span timestamps)."""
+        return (time.perf_counter() - self._origin) * 1e6
+
+    # -- per-thread span depth (used by obs.spans) --------------------------
+
+    def _depth(self) -> int:
+        return getattr(self._tls, "depth", 0)
+
+    def _push(self) -> int:
+        d = getattr(self._tls, "depth", 0)
+        self._tls.depth = d + 1
+        return d
+
+    def _pop(self) -> None:
+        self._tls.depth = max(getattr(self._tls, "depth", 1) - 1, 0)
+
+    # -- metrics ------------------------------------------------------------
+
+    def counter_add(self, name: str, value: float = 1.0) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + value
+
+    def gauge_set(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = _Hist()
+            h.add(value)
+
+    # -- events -------------------------------------------------------------
+
+    def record_event(self, ev: Dict[str, Any]) -> None:
+        """Append one Chrome-trace-shaped event (and mirror it to the
+        JSONL sink when one is configured)."""
+        with self._lock:
+            if len(self._events) >= self.max_events:
+                self._dropped += 1
+            else:
+                self._events.append(ev)
+            if self._sink is not None:
+                try:
+                    self._sink.write(json.dumps(ev) + "\n")
+                except (OSError, ValueError):
+                    self._sink = None      # dead sink: stop writing, keep obs
+
+    def error(self, name: str, message: str, **attrs: Any) -> None:
+        """Record an error as an instant event + ``<name>.errors`` counter
+        (attributable from periodic train-loop obs lines)."""
+        args = dict(attrs)
+        args["message"] = message
+        self.record_event({"name": name, "cat": "error", "ph": "i",
+                           "ts": self.now_us(), "pid": os.getpid(),
+                           "tid": threading.get_ident(), "s": "t",
+                           "args": args})
+        self.counter_add(f"{name}.errors", 1)
+
+    # -- sinks / snapshots --------------------------------------------------
+
+    def open_jsonl(self, path: str) -> None:
+        """Stream every subsequent event to ``path`` as JSON lines."""
+        with self._lock:
+            if self._sink is not None:
+                self._sink.close()
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._sink = open(path, "a")
+            self._sink_path = path
+
+    def close_jsonl(self) -> None:
+        with self._lock:
+            if self._sink is not None:
+                self._sink.close()
+                self._sink = None
+                self._sink_path = None
+
+    def events(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._events)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Pull-style read of everything recorded so far (host-only)."""
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "histograms": {k: h.summary()
+                               for k, h in self._hists.items()},
+                "events": len(self._events),
+                "dropped_events": self._dropped,
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+            self._events.clear()
+            self._dropped = 0
+            self._origin = time.perf_counter()
+
+    def summary_line(self, prefixes: Optional[Sequence[str]] = None) -> str:
+        """One compact ``k=v`` report line (counters + gauges + histogram
+        means), optionally filtered to name prefixes."""
+        snap = self.snapshot()
+        parts: List[str] = []
+
+        def keep(name: str) -> bool:
+            return prefixes is None or any(name.startswith(p)
+                                           for p in prefixes)
+
+        for k in sorted(snap["counters"]):
+            if keep(k):
+                parts.append(f"{k}={_fmt(snap['counters'][k])}")
+        for k in sorted(snap["gauges"]):
+            if keep(k):
+                parts.append(f"{k}={_fmt(snap['gauges'][k])}")
+        for k in sorted(snap["histograms"]):
+            if keep(k):
+                h = snap["histograms"][k]
+                parts.append(f"{k}.mean={_fmt(h['mean'])}")
+        return " ".join(parts) if parts else "(no metrics)"
+
+
+def _fmt(v: float) -> str:
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+# -- module state: the default registry + the enable flag -------------------
+
+_default = Registry()
+_enabled = _env_enabled()
+
+
+def default_registry() -> Registry:
+    return _default
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def enable() -> None:
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def set_enabled(flag: bool) -> None:
+    global _enabled
+    _enabled = bool(flag)

@@ -1,0 +1,102 @@
+"""Structured spans: wall-clock phases with nesting, profiler bridging.
+
+``span(name, **attrs)`` is the one instrumentation primitive the hot
+paths use.  Enabled, it
+
+  * records a Chrome-trace complete event (``ph="X"``, µs timestamps,
+    per-thread ``tid`` and nesting ``depth``) into the registry,
+  * feeds the duration into the ``<name>`` histogram (seconds), and
+  * enters a ``jax.profiler.TraceAnnotation`` so the same phase shows up
+    on the host timeline of an XLA profile (near-free when no profiler
+    trace is active).
+
+Disabled, ``span()`` returns a shared no-op context manager — one flag
+read, no allocation.
+
+A span around an async-dispatching JAX call times the DISPATCH, not the
+device compute; that is the documented semantics (the device story comes
+from the profiler annotations + ``jax.named_scope`` regions inside the
+jitted stages).  Spans never read device values, so instrumented paths
+keep PR 7's zero-sync guarantee and trace cleanly under an enclosing
+``jax.jit`` (the span then measures trace time, once).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any, Dict, Optional
+
+from repro.obs import registry as _reg
+
+try:                                      # profiler bridge (optional)
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except Exception:                         # pragma: no cover - old/absent jax
+    _TraceAnnotation = None
+
+
+class _NullSpan:
+    """Shared no-op span for the disabled path."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc: Any) -> bool:
+        return False
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Span:
+    __slots__ = ("name", "cat", "args", "_reg", "_t0", "_ts", "_depth",
+                 "_annot")
+
+    def __init__(self, name: str, cat: str, args: Dict[str, Any],
+                 reg: _reg.Registry) -> None:
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self._reg = reg
+        self._annot = None
+
+    def __enter__(self) -> "Span":
+        reg = self._reg
+        self._depth = reg._push()
+        self._ts = reg.now_us()
+        self._t0 = time.perf_counter()
+        if _TraceAnnotation is not None:
+            self._annot = _TraceAnnotation(self.name)
+            self._annot.__enter__()
+        return self
+
+    def __exit__(self, exc_type: Any, exc: Any, tb: Any) -> bool:
+        dur_s = time.perf_counter() - self._t0
+        if self._annot is not None:
+            self._annot.__exit__(exc_type, exc, tb)
+        reg = self._reg
+        reg._pop()
+        ev: Dict[str, Any] = {
+            "name": self.name, "cat": self.cat, "ph": "X",
+            "ts": self._ts, "dur": dur_s * 1e6,
+            "pid": os.getpid(), "tid": threading.get_ident(),
+            "depth": self._depth,
+        }
+        if self.args:
+            ev["args"] = self.args
+        if exc_type is not None:
+            ev.setdefault("args", {})["error"] = exc_type.__name__
+        reg.record_event(ev)
+        reg.observe(self.name, dur_s)
+        return False
+
+
+def span(name: str, cat: str = "span",
+         reg: Optional[_reg.Registry] = None, **attrs: Any):
+    """Context manager timing one phase (no-op when obs is disabled)."""
+    if not _reg.enabled():
+        return NULL_SPAN
+    return Span(name, cat, attrs, reg if reg is not None
+                else _reg.default_registry())

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import lm
 from repro.models.attention import KVCache
 from repro.serve.paging import PagePool, cache_kind
@@ -113,6 +114,7 @@ class ServeReport:
     step_times: List[float]                # wall seconds per decode step
     kv_samples: List[Dict[str, int]]       # per-step PagePool.kv_bytes
     pool_stats: Dict[str, float]
+    obs: Optional[Dict] = None             # obs.snapshot() when enabled
 
     @property
     def generated_tokens(self) -> int:
@@ -166,10 +168,13 @@ class ContinuousServeEngine:
 
     def _admit(self, st: RequestState, caches):
         """Prefill one request and write it into its slot."""
-        logits, one = self._prefill(self.params, batch=st.req.inputs)
-        st.tokens.append(int(jnp.argmax(logits[:, -1, :], axis=-1)[0]))
-        one = lm.rowwise_caches(pad_caches(one, self.max_len))
-        return _slot_write(caches, one, jnp.int32(st.slot))
+        with obs.span("serve.prefill", rid=st.req.rid, slot=st.slot):
+            logits, one = self._prefill(self.params, batch=st.req.inputs)
+            st.tokens.append(int(jnp.argmax(logits[:, -1, :], axis=-1)[0]))
+            one = lm.rowwise_caches(pad_caches(one, self.max_len))
+            caches = _slot_write(caches, one, jnp.int32(st.slot))
+        obs.counter_add("serve.admitted", 1)
+        return caches
 
     def serve(self, requests: List[Request]) -> ServeReport:
         """Run every request to completion; returns tokens + step stats."""
@@ -189,10 +194,13 @@ class ContinuousServeEngine:
         step_times: List[float] = []
         kv_samples: List[Dict[str, int]] = []
         while sched.has_work():
-            for st in sched.admit(step, lambda r: r.prompt_len(self.cfg)):
-                caches = self._admit(st, caches)
+            with obs.span("serve.admit", step=step):
+                for st in sched.admit(step,
+                                      lambda r: r.prompt_len(self.cfg)):
+                    caches = self._admit(st, caches)
             for st in sched.evict_finished(step):   # 1-token requests
                 self.pool.release_slot(st.slot)
+                obs.counter_add("serve.evicted", 1)
             if not sched.active:
                 step += 1
                 continue
@@ -201,20 +209,33 @@ class ContinuousServeEngine:
             for slot, st in sched.active.items():
                 toks[slot, 0] = st.tokens[-1]
             t0 = time.perf_counter()
-            nxt, _, caches = self._decode(self.params,
-                                          tokens=jnp.asarray(toks),
-                                          caches=caches)
-            nxt = jax.block_until_ready(nxt)
-            step_times.append(time.perf_counter() - t0)
+            with obs.span("serve.decode_step", step=step,
+                          active=len(sched.active)):
+                nxt, _, caches = self._decode(self.params,
+                                              tokens=jnp.asarray(toks),
+                                              caches=caches)
+                nxt = jax.block_until_ready(nxt)
+            dt = time.perf_counter() - t0
+            step_times.append(dt)
+            obs.counter_add("serve.decode_steps", 1)
+            obs.observe("serve.step_time_s", dt)
             nxt_host = np.asarray(nxt)
             for st in sched.active.values():
                 st.tokens.append(int(nxt_host[st.slot, 0]))
             for st in sched.evict_finished(step):
                 self.pool.release_slot(st.slot)
+                obs.counter_add("serve.evicted", 1)
 
             cold = self.pool.cold_pages(sched.positions())
-            caches = self.pool.compress_pages(caches, cold)
-            kv_samples.append(self.pool.kv_bytes(sched.positions()))
+            with obs.span("serve.page_compress", step=step,
+                          cold_pages=len(cold)):
+                caches = self.pool.compress_pages(caches, cold)
+            kv = self.pool.kv_bytes(sched.positions())
+            kv_samples.append(kv)
+            if obs.enabled():       # host bookkeeping ints; no device reads
+                obs.gauge_set("serve.resident_bytes", kv["resident_bytes"])
+                obs.gauge_set("serve.raw_equiv_bytes", kv["raw_equiv_bytes"])
+                obs.gauge_set("serve.cold_pages", kv["cold_pages"])
             step += 1
 
         self._caches = caches                      # exposed for tests
@@ -222,4 +243,5 @@ class ContinuousServeEngine:
                   for st in sched.finished}
         return ServeReport(tokens=tokens, states=sched.finished, steps=step,
                            step_times=step_times, kv_samples=kv_samples,
-                           pool_stats=dict(self.pool.stats))
+                           pool_stats=dict(self.pool.stats),
+                           obs=obs.snapshot() if obs.enabled() else None)

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.bitpack import width_bucket
 from repro.core.critical_points import classify
 from repro.core.guarantees import violations
@@ -299,6 +300,11 @@ class PagePool:
         return caches
 
     def _compress_chunk(self, caches, chunk: List[Tuple[int, int]]):
+        with obs.span("serve.compress_chunk", pages=len(chunk),
+                      mode=self.kv_mode):
+            return self._compress_chunk_inner(caches, chunk)
+
+    def _compress_chunk_inner(self, caches, chunk: List[Tuple[int, int]]):
         m = len(chunk)
         # pad to a power-of-two bucket (duplicates of the last page) so the
         # compiled batch shapes come from a small static set
@@ -329,17 +335,21 @@ class PagePool:
     def _finalize_sweep(self, pending: List[Dict]) -> None:
         """ONE device->host read for the whole sweep's accounting, then
         host bookkeeping + trimming the stored streams to their measured
-        bucket capacity."""
-        accts = jax.device_get([rec["acct"] for rec in pending])
+        bucket capacity.  This is the serve tier's designated sync point,
+        so the obs counters fed here cost no extra transfers."""
+        with obs.span("serve.finalize_sweep", chunks=len(pending)):
+            accts = jax.device_get([rec["acct"] for rec in pending])
+        sweep_bytes = 0
         for rec, acct in zip(pending, accts):
             cid, chunk = rec["cid"], rec["chunk"]
             wb = width_bucket(int(acct["w_max"]))
             self._calls[cid]["comp"] = self._trim_to_bucket(
                 self._calls[cid]["comp"], wb)
             for j, key in enumerate(chunk):
+                nb = int(acct["page_bytes"][j])
+                sweep_bytes += nb
                 self._compressed[key] = {
-                    "call": cid, "offset": j,
-                    "bytes": int(acct["page_bytes"][j])}
+                    "call": cid, "offset": j, "bytes": nb}
             if self.verify:
                 self.stats["max_abs_err"] = max(self.stats["max_abs_err"],
                                                 float(acct["max_err"]))
@@ -347,6 +357,10 @@ class PagePool:
                 self.stats["fields_verified"] += len(chunk) * self.fields_per_page
             self.stats["pages_compressed"] += len(chunk)
             self.stats["compress_calls"] += 1
+            obs.counter_add("serve.pages_compressed", len(chunk))
+            obs.counter_add("serve.compress_calls", 1)
+            obs.counter_add(f"serve.page_bucket_{wb}", len(chunk))
+        obs.counter_add("serve.cold_stream_bytes", sweep_bytes)
 
     def fetch_page(self, slot: int, page: int) -> jnp.ndarray:
         """Decompress one page from the tier store (on-demand read path):

@@ -23,6 +23,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
+from repro import obs
 from repro.ckpt import manager as ckpt
 from repro.train.state import TrainState
 
@@ -139,8 +140,16 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
         report.losses.append(loss)
         report.step_times.append(dt)
         report.steps_run += 1
+        obs.counter_add("train.steps", 1)
+        obs.observe("train.step_time_s", dt)
         if i % log_every == 0:
             log(f"[loop] step {i} loss {loss:.4f} ({dt * 1e3:.1f} ms)")
+            if obs.enabled():
+                # pull-style snapshot of the hot-path registries; reading
+                # it costs host dict walks only, never a device transfer
+                log("[obs] " + obs.summary_line(
+                    ("train.", "ckpt.", "ring.", "collectives.",
+                     "szp.", "toposzp.")))
 
         if (i + 1) % ckpt_every == 0:
             if ckpt_manager is not None:
