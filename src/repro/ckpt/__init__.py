@@ -1,3 +1,4 @@
+from repro.ckpt.coord import BarrierTimeout, CommitTimeout
 from repro.ckpt.manager import (CheckpointManager, RestoreResult, latest_step,
                                 prune, restore, save)
 from repro.ckpt.manifest import LOSSY_MODES, MODES, TreeMismatchError
@@ -5,4 +6,5 @@ from repro.ckpt.async_writer import AsyncWriteError, AsyncWriter
 
 __all__ = ["save", "restore", "latest_step", "prune",
            "CheckpointManager", "RestoreResult", "AsyncWriter",
-           "AsyncWriteError", "TreeMismatchError", "MODES", "LOSSY_MODES"]
+           "AsyncWriteError", "TreeMismatchError", "MODES", "LOSSY_MODES",
+           "BarrierTimeout", "CommitTimeout"]

@@ -48,7 +48,26 @@ class AsyncWriteError(RuntimeError):
 
 
 class AsyncWriter:
-    def __init__(self) -> None:
+    """Single-slot background writer with transient-IO retries.
+
+    ``retries``/``backoff_s`` bound how many times a failed write is
+    re-attempted when it raises ``OSError``/``IOError`` (a flaky NFS
+    mount, a momentarily full disk): each retry waits
+    ``min(backoff_s * 2**attempt, backoff_max_s)`` — capped exponential
+    backoff — re-runs ``fn`` from scratch (the write paths are
+    idempotent: they rebuild their tmp state), and counts
+    ``ckpt.write_retries``.  Non-IO failures and exhausted budgets
+    surface exactly as before (wrapped as :class:`AsyncWriteError` for
+    labeled submissions).  The default ``retries=0`` keeps the writer's
+    raw behavior; the checkpoint manager threads its own
+    ``write_retries`` knob through.
+    """
+
+    def __init__(self, retries: int = 0, backoff_s: float = 0.05,
+                 backoff_max_s: float = 2.0) -> None:
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.backoff_max_s = float(backoff_max_s)
         self._thread: Optional[threading.Thread] = None
         self._result: Any = None
         self._exc: Optional[BaseException] = None
@@ -72,24 +91,46 @@ class AsyncWriter:
             obs.gauge_set("ckpt.queue_depth", 1)
 
         def run() -> None:
+            attempt = 0
             try:
-                with obs.span("ckpt.write", label=label or ""):
-                    self._result = fn()
-            except BaseException as e:     # re-raised on the next wait()
-                obs.error("ckpt.write", f"{type(e).__name__}: {e}",
-                          label=label or "")
-                # labeled submissions (the manager's "step <N>") get the
-                # attributable wrapper; bare submissions keep their
-                # original exception type
-                self._exc = (AsyncWriteError(label, e)
-                             if label and not isinstance(e, AsyncWriteError)
-                             else e)
+                while True:
+                    try:
+                        with obs.span("ckpt.write", label=label or "",
+                                      attempt=attempt):
+                            self._result = fn()
+                        return
+                    except (OSError, IOError) as e:
+                        if attempt >= self.retries:
+                            self._fail(e, label)
+                            return
+                        delay = min(self.backoff_s * (2 ** attempt),
+                                    self.backoff_max_s)
+                        attempt += 1
+                        obs.counter_add("ckpt.write_retries", 1)
+                        obs.error("ckpt.write_retry",
+                                  f"{type(e).__name__}: {e}",
+                                  label=label or "", attempt=attempt)
+                        time.sleep(delay)
+                    except BaseException as e:
+                        self._fail(e, label)
+                        return
             finally:
                 obs.gauge_set("ckpt.queue_depth", 0)
 
         self._thread = threading.Thread(target=run, daemon=True,
                                         name="ckpt-async-writer")
         self._thread.start()
+
+    def _fail(self, e: BaseException, label: Optional[str]) -> None:
+        """Record a terminal failure; re-raised on the next wait()."""
+        obs.error("ckpt.write", f"{type(e).__name__}: {e}",
+                  label=label or "")
+        # labeled submissions (the manager's "step <N>") get the
+        # attributable wrapper; bare submissions keep their
+        # original exception type
+        self._exc = (AsyncWriteError(label, e)
+                     if label and not isinstance(e, AsyncWriteError)
+                     else e)
 
     def wait(self) -> Any:
         """Block until the in-flight write (if any) commits; returns its

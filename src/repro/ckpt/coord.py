@@ -1,0 +1,247 @@
+"""Coordinated multi-host checkpoint commit over a shared filesystem.
+
+Every process of a multi-controller job writes only its addressable
+shards (``manifest.blob_file(process_index)``), so committing a
+checkpoint needs coordination: a manifest listing only one process's
+shards is a *partial commit* — restore would silently produce a
+shard-subset state, voiding the zero-FP/FT and 2*eb contracts the
+manifest's guarantees re-verification is supposed to re-prove.  This
+module is the barrier + single-committer protocol that makes the commit
+atomic across processes, using only the shared directory (no RPC):
+
+    step_N.tmp/                      all processes write here concurrently
+        shards_p0000.bin             process 0's blob (fsync'd)
+        shards_p0001.bin             ...
+        ready.0000.json              per-process READY marker, written
+        ready.0001.json              atomically AFTER its blob: the
+                                     process's manifest fragment (per-leaf
+                                     shard docs + blob-file nbytes)
+        manifest.json                merged by the COMMITTER, written last
+    step_N/                          published by the committer alone via
+                                     os.replace (the commit point)
+
+Protocol per process:
+
+  1. write ``shards_p{pid}.bin`` into the shared ``step_N.tmp`` (the dir
+     is created ``exist_ok`` — no process may delete it);
+  2. publish its READY marker atomically (``.part`` + rename): the
+     fragment carries pid/step/world, the blob file's total nbytes, the
+     mesh shape, and the per-leaf shard entries (sha256 + [start, stop)
+     index) for exactly its shards;
+  3. barrier: poll (bounded timeout, exponential backoff) until all
+     ``world`` markers exist — :class:`BarrierTimeout` on expiry (a peer
+     crashed before its marker: the checkpoint is abandoned, no manifest
+     is ever written, restore falls back past the torn directory);
+  4. the elected committer — the lowest ready pid — merges the fragments
+     into one manifest (validating step/world/mesh agreement, per-leaf
+     metadata agreement, and blob-file sizes), writes ``manifest.json``
+     LAST, fsyncs, removes the markers, and alone runs the
+     ``os.replace`` publish + parent fsync;
+  5. non-committers wait for the publish with the same bounded timeout —
+     :class:`CommitTimeout` if the committer died pre-manifest (again:
+     no commit marker, restore falls back).
+
+The protocol is crash-atomic at every point: the ONLY transition that
+makes a checkpoint restorable is the committer's rename of a directory
+that already contains a fully merged, fsync'd manifest.  Restore
+additionally validates shard *coverage* (``manifest.check_coverage``) so
+even a hand-forged subset manifest is detected and fallen past.
+
+Note: saves are assumed to use monotonically increasing steps —
+re-committing an already-published step concurrently from two jobs is
+not race-protected (the stale directory would satisfy the publish wait).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro import obs
+from repro.ckpt import manifest as mf
+
+READY_PREFIX = "ready."
+DEFAULT_TIMEOUT_S = 120.0
+
+
+class BarrierTimeout(TimeoutError):
+    """A peer never published its READY marker within the timeout."""
+
+
+class CommitTimeout(TimeoutError):
+    """The committer never published the manifest within the timeout."""
+
+
+def ready_file(process_index: int) -> str:
+    return f"{READY_PREFIX}{process_index:04d}.json"
+
+
+def committer_index(ready_pids: List[int]) -> int:
+    """Single-committer election: the lowest ready process index (with a
+    full barrier this is process 0; the function exists so a future
+    degraded-commit mode can elect among survivors)."""
+    return min(ready_pids)
+
+
+def write_ready(tmp: str, process_index: int, step: int, world: int,
+                fname: str, nbytes: int,
+                mesh_shape: Optional[Dict[str, int]],
+                entries: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Atomically publish this process's manifest fragment (blob must
+    already be durable — the marker asserts 'my shards are on disk').
+
+    The marker is deliberately NOT fsync'd: it is protocol state, not
+    durability state.  Durability comes from the blob fsync (already
+    done) and the committer's manifest fsync; a marker lost in a machine
+    crash just means the barrier times out and the checkpoint is
+    correctly abandoned.  The ``.part`` + rename still gives peers
+    atomic all-or-nothing visibility."""
+    doc = {"pid": int(process_index), "step": int(step),
+           "world": int(world), "file": fname, "nbytes": int(nbytes),
+           "mesh": mesh_shape, "leaves": entries}
+    path = os.path.join(tmp, ready_file(process_index))
+    part = path + ".part"
+    with open(part, "w") as f:
+        json.dump(doc, f)
+        f.flush()
+    os.replace(part, path)
+    return doc
+
+
+def _poll(predicate: Callable[[], bool], timeout_s: float, exc, what: str,
+          poll_s: float = 0.005, backoff: float = 1.6,
+          max_poll_s: float = 0.25) -> None:
+    """Bounded-timeout wait loop with capped exponential backoff."""
+    deadline = time.monotonic() + timeout_s
+    delay = poll_s
+    while not predicate():
+        now = time.monotonic()
+        if now >= deadline:
+            raise exc(f"{what} (timeout {timeout_s:.1f}s)")
+        time.sleep(min(delay, deadline - now))
+        delay = min(delay * backoff, max_poll_s)
+
+
+def _ready_pids(tmp: str) -> List[int]:
+    try:
+        names = os.listdir(tmp)
+    except OSError:
+        return []
+    out = []
+    for n in names:
+        if n.startswith(READY_PREFIX) and n.endswith(".json"):
+            try:
+                out.append(int(n[len(READY_PREFIX):-len(".json")]))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def wait_for_ready(tmp: str, world: int,
+                   timeout_s: float = DEFAULT_TIMEOUT_S,
+                   final: Optional[str] = None) -> List[int]:
+    """Barrier: block until all ``world`` READY markers exist.  Returns
+    the sorted pids; records ``ckpt.commit_barrier_s``.
+
+    ``final`` closes a publish race: a fast committer may consume the
+    markers and rename ``tmp`` away before a slow peer's poll re-reads
+    them — observing the published manifest at ``final`` is then ALSO a
+    successful barrier (everyone was ready, by construction)."""
+    def committed() -> bool:
+        return (final is not None
+                and os.path.isfile(os.path.join(final, mf.MANIFEST)))
+
+    t0 = time.perf_counter()
+    _poll(lambda: committed() or len(_ready_pids(tmp)) >= world, timeout_s,
+          BarrierTimeout, f"waiting for {world} ready markers in {tmp}")
+    obs.observe("ckpt.commit_barrier_s", time.perf_counter() - t0)
+    pids = _ready_pids(tmp)
+    if len(pids) < world and committed():
+        return list(range(world))
+    if pids != list(range(world)):
+        raise IOError(f"ready markers {pids} do not match world {world} "
+                      f"(stale markers from another run?)")
+    return pids
+
+
+def wait_for_commit(final: str, timeout_s: float = DEFAULT_TIMEOUT_S
+                    ) -> None:
+    """Non-committer half of the publish: wait for the committed
+    directory (its manifest was written before the rename)."""
+    _poll(lambda: os.path.isfile(os.path.join(final, mf.MANIFEST)),
+          timeout_s, CommitTimeout,
+          f"waiting for the committer to publish {final}")
+
+
+def load_fragments(tmp: str, step: int, world: int,
+                   own: Optional[Dict[str, Any]] = None
+                   ) -> List[Dict[str, Any]]:
+    """Read + cross-validate all READY fragments (committer side).
+
+    ``own`` is the committer's in-memory fragment (``write_ready``'s
+    return value): its slot skips the disk round-trip — it was built
+    from the entries just written and its blob is already fsync'd."""
+    frags = []
+    for pid in range(world):
+        if own is not None and own.get("pid") == pid:
+            frags.append(own)
+            continue
+        path = os.path.join(tmp, ready_file(pid))
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("pid") != pid:
+            raise IOError(f"ready marker {path} claims pid {doc.get('pid')}")
+        if doc.get("step") != step or doc.get("world") != world:
+            raise IOError(
+                f"ready marker {path} is from another commit "
+                f"(step {doc.get('step')} world {doc.get('world')}, "
+                f"expected step {step} world {world})")
+        blob = os.path.join(tmp, doc["file"])
+        got = os.path.getsize(blob) if os.path.isfile(blob) else -1
+        if got != doc["nbytes"]:
+            raise IOError(f"blob {blob} has {got} bytes, marker promised "
+                          f"{doc['nbytes']} (torn write?)")
+        frags.append(doc)
+    return frags
+
+
+_LEAF_META = ("shape", "dtype", "mode", "spec")
+
+
+def merge_fragments(frags: List[Dict[str, Any]], step: int, world: int
+                    ) -> Dict[str, Any]:
+    """Merge per-process fragments into the single v2 manifest doc.
+
+    Leaves are keyed by name (order taken from the first fragment that
+    mentions each — all processes flatten the same tree, so that is the
+    shared flatten order); per-leaf metadata must agree across fragments
+    and shard docs are concatenated in pid order.  A process that holds
+    no addressable shard of a leaf contributes an empty ``shards`` list.
+    """
+    meshes = [f["mesh"] for f in frags if f.get("mesh") is not None]
+    if meshes and any(m != meshes[0] for m in meshes):
+        raise IOError(f"fragments disagree on the mesh: {meshes}")
+    merged: Dict[str, Dict[str, Any]] = {}
+    order: List[str] = []
+    for frag in frags:
+        for e in frag["leaves"]:
+            name = e["name"]
+            if name not in merged:
+                entry = dict(e)
+                entry["shards"] = list(e["shards"])
+                merged[name] = entry
+                order.append(name)
+                continue
+            have = merged[name]
+            for k in _LEAF_META:
+                if have.get(k) != e.get(k):
+                    raise IOError(
+                        f"fragments disagree on {name}.{k}: "
+                        f"{have.get(k)!r} vs {e.get(k)!r} "
+                        f"(pid {frag['pid']})")
+            if have.get("eb") != e.get("eb"):
+                raise IOError(f"fragments disagree on {name}.eb")
+            have["shards"].extend(e["shards"])
+    leaves = [merged[n] for n in order]
+    return mf.build(step, leaves, meshes[0] if meshes else None, world)

@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
+from repro.ckpt import coord
 from repro.ckpt import manifest as mf
 from repro.ckpt import sharded
 from repro.ckpt.async_writer import AsyncWriter
@@ -188,8 +189,20 @@ def restore(directory: str, tree_template,
     return None
 
 
-def prune(directory: str, keep: int = 3) -> None:
-    for s in _step_dirs(directory)[:-keep]:
+def prune(directory: str, keep: int = 3, skip=()) -> None:
+    """Delete all but the newest ``keep`` checkpoints.
+
+    ``skip`` lists steps that must survive regardless of age — the step
+    an async writer currently holds (snapshot taken, commit pending or
+    just published): pruning it would race the writer's ``os.replace``
+    and delete a checkpoint the step loop believes exists.  ``.tmp``
+    in-flight directories are never candidates (``_step_dirs`` excludes
+    them), so a concurrent uncommitted write is untouchable by design.
+    """
+    skip = set(skip)
+    for s in _step_dirs(directory)[:-keep] if keep else []:
+        if s in skip:
+            continue
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)
 
@@ -198,19 +211,20 @@ def prune(directory: str, keep: int = 3) -> None:
 # v2: sharded + async + resharding-aware
 # --------------------------------------------------------------------------
 
-def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
-              mesh_shape: Optional[Dict[str, int]], mode: str, eb: float,
-              min_lossy: int, keep: Optional[int], log: Log,
-              backend: Optional[str] = None) -> str:
-    """Serialize a snapshot to an atomic v2 checkpoint (background half)."""
-    os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+def _write_blobs(tmp: str, step: int, snaps: List[sharded.LeafSnap],
+                 mode: str, eb: float, min_lossy: int,
+                 backend: Optional[str], process_index: int
+                 ) -> Tuple[str, List[Dict[str, Any]], int]:
+    """Write this process's blob file; returns (fname, leaf entries with
+    ONLY its shard docs, total bytes).  Shared by the single-controller
+    and coordinated commit paths.
 
-    fname = mf.blob_file(jax.process_index())
+    Fault sites: ``ckpt.write`` fires before any byte lands (the
+    transient-IO fault the async writer's retry loop absorbs);
+    ``ckpt.blob`` may tear each blob on its way to disk (the manifest
+    keeps the hash of the INTENDED bytes — exactly a torn write)."""
+    faults.fire("ckpt.write", step=step, pid=process_index)
+    fname = mf.blob_file(process_index)
     entries = []
     offset = 0
     with obs.span("ckpt.write_blobs", step=step, leaves=len(snaps)), \
@@ -226,7 +240,8 @@ def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
                         [sh.data for sh in snap.shards], emode, eb,
                         backend=backend)
                 for sh, blob in zip(snap.shards, blobs):
-                    f.write(blob)
+                    f.write(faults.mangle("ckpt.blob", blob, step=step,
+                                          leaf=snap.name))
                     shard_docs.append({
                         "file": fname, "offset": offset,
                         "nbytes": len(blob),
@@ -243,24 +258,120 @@ def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
                     f"{snap.name!r}: {type(e).__name__}: {e}") from e
         f.flush()
         os.fsync(f.fileno())
+    return fname, entries, offset
 
+
+def _publish(tmp: str, final: str, directory: str, doc: Dict[str, Any],
+             step: int, offset: int,
+             pre_rename: Optional[Callable[[], None]] = None) -> None:
+    """Write the manifest LAST, fsync, and atomically publish the
+    directory — the single transition that makes the checkpoint real.
+
+    ``pre_rename`` runs after the manifest is durable but before the
+    rename (the coordinated path removes its READY markers there: they
+    must survive until the manifest exists — a committer dying earlier
+    would otherwise strand peers still polling the barrier — but must
+    not leak into the published directory)."""
     with obs.span("ckpt.commit", step=step, blob_bytes=offset):
-        doc = mf.build(step, entries, mesh_shape, jax.process_count())
+        faults.fire("ckpt.before_manifest", step=step)
         with open(os.path.join(tmp, mf.MANIFEST), "w") as f:
             json.dump(doc, f)
             f.flush()
             os.fsync(f.fileno())
         _fsync_dir(tmp)
+        if pre_rename is not None:
+            pre_rename()
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
         _fsync_dir(directory)
     obs.counter_add("ckpt.commits", 1)
     obs.counter_add("ckpt.blob_bytes", float(offset))
+
+
+def _write_v2(directory: str, step: int, snaps: List[sharded.LeafSnap],
+              mesh_shape: Optional[Dict[str, int]], mode: str, eb: float,
+              min_lossy: int, keep: Optional[int], log: Log,
+              backend: Optional[str] = None) -> str:
+    """Serialize a snapshot to an atomic v2 checkpoint (single-controller
+    background half)."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    _, entries, offset = _write_blobs(tmp, step, snaps, mode, eb,
+                                      min_lossy, backend,
+                                      jax.process_index())
+    doc = mf.build(step, entries, mesh_shape, 1)
+    _publish(tmp, final, directory, doc, step, offset)
     if keep is not None:
-        prune(directory, keep)
+        prune(directory, keep, skip={step})
     if log is not None:
         log(f"[ckpt] committed {final} ({offset} blob bytes, mode={mode})")
+    return final
+
+
+def _write_v2_coord(directory: str, step: int,
+                    snaps: List[sharded.LeafSnap],
+                    mesh_shape: Optional[Dict[str, int]], mode: str,
+                    eb: float, min_lossy: int, keep: Optional[int],
+                    log: Log, backend: Optional[str],
+                    process_index: int, process_count: int,
+                    timeout_s: float) -> str:
+    """Coordinated multi-process commit (see ``ckpt.coord``): every
+    process writes its own blob + READY marker into the SHARED tmp dir;
+    the elected committer merges the fragments and alone publishes."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    # The tmp dir is shared: create exist_ok and clear only OWN stale
+    # files from an aborted previous attempt of this step.
+    os.makedirs(tmp, exist_ok=True)
+    for stale in (mf.blob_file(process_index),
+                  coord.ready_file(process_index)):
+        try:
+            os.remove(os.path.join(tmp, stale))
+        except OSError:
+            pass
+
+    fname, entries, offset = _write_blobs(tmp, step, snaps, mode, eb,
+                                          min_lossy, backend,
+                                          process_index)
+    faults.fire("ckpt.before_barrier", step=step, pid=process_index)
+    own = coord.write_ready(tmp, process_index, step, process_count, fname,
+                            offset, mesh_shape, entries)
+    pids = coord.wait_for_ready(tmp, process_count, timeout_s, final=final)
+
+    if process_index == coord.committer_index(pids):
+        frags = coord.load_fragments(tmp, step, process_count, own=own)
+        doc = coord.merge_fragments(frags, step, process_count)
+        mf.check_coverage(doc)     # refuse to publish a torn merge
+
+        def _drop_markers():
+            # only once the manifest is durable: removing them earlier
+            # would strand a peer still polling the barrier if the
+            # committer dies pre-manifest (BarrierTimeout instead of
+            # the correct CommitTimeout abandonment)
+            for pid in pids:
+                try:
+                    os.remove(os.path.join(tmp, coord.ready_file(pid)))
+                except OSError:
+                    pass
+
+        _publish(tmp, final, directory, doc, step, offset,
+                 pre_rename=_drop_markers)
+        if keep is not None:
+            prune(directory, keep, skip={step})
+        if log is not None:
+            log(f"[ckpt] committed {final} (committer p{process_index}, "
+                f"{process_count} processes, mode={mode})")
+    else:
+        coord.wait_for_commit(final, timeout_s)
+        if log is not None:
+            log(f"[ckpt] p{process_index} observed commit of {final}")
     return final
 
 
@@ -270,6 +381,10 @@ def _load_v2(path: str, template, mesh, verify: bool,
     doc = mf.load(path)
     names, leaves, treedef = _flatten_with_names(template)
     mf.check_tree(doc, names)
+    # Shard-coverage validation: a partial commit (manifest listing only
+    # a subset of the writing processes' shards) is detected from the
+    # metadata alone and treated as corrupt — never half-restored.
+    mf.check_coverage(doc)
     by_name = {e["name"]: e for e in doc["leaves"]}
     files: Dict[str, bytes] = {}
     out = []
@@ -321,13 +436,30 @@ class CheckpointManager:
       keep:       checkpoints retained after each save (None = all).
       min_compress_size: f32 leaves/shards below this stay raw.
       verify_restore: re-check hashes and the TopoSZp FP/FT guarantee.
+      write_retries / write_backoff_s: transient ``OSError`` retry budget
+        of the background writer (capped exponential backoff) before the
+        failure surfaces as ``AsyncWriteError``.
+      process_index / process_count: multi-controller identity; default
+        to ``jax.process_index()`` / ``jax.process_count()``.  Override
+        for non-JAX launchers or protocol tests.
+      coordinated: force the coordinated commit protocol (None = only
+        when ``process_count > 1``).  With multiple processes, every
+        process writes its own blob + READY marker into the shared tmp
+        dir and the elected committer merges + publishes (``ckpt.coord``).
+      barrier_timeout_s: bounded wait for peers' READY markers and for
+        the committer's publish.
     """
 
     def __init__(self, directory: str, mode: str = "raw", eb: float = 1e-4,
                  async_write: bool = True, keep: Optional[int] = 3,
                  min_compress_size: int = sharded.DEFAULT_MIN_LOSSY,
                  verify_restore: bool = True, log: Log = print,
-                 kernel_backend: Optional[str] = None):
+                 kernel_backend: Optional[str] = None,
+                 write_retries: int = 2, write_backoff_s: float = 0.05,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None,
+                 coordinated: Optional[bool] = None,
+                 barrier_timeout_s: float = coord.DEFAULT_TIMEOUT_S):
         if mode not in mf.MODES:
             raise ValueError(f"mode must be one of {mf.MODES}, got {mode!r}")
         self.directory = directory
@@ -341,41 +473,102 @@ class CheckpointManager:
         # TopoSZp/SZp kernel dispatch for blob encode/decode (None/"auto"
         # resolves to the hardware default, see kernels.ops.resolve_backend)
         self.kernel_backend = kernel_backend
-        self._writer = AsyncWriter()
+        self._pid = process_index
+        self._world = process_count
+        self.coordinated = coordinated
+        self.barrier_timeout_s = float(barrier_timeout_s)
+        self._writer = AsyncWriter(retries=write_retries,
+                                   backoff_s=write_backoff_s)
+        # Commit ledger: which submitted steps actually landed / failed —
+        # the train loop reconciles report.checkpoints against this so a
+        # failed background write never leaves a phantom checkpoint.
+        self._committed: List[int] = []
+        self._failed: List[Tuple[int, str]] = []
+        self._held_step: Optional[int] = None
 
     @property
     def in_flight(self) -> bool:
         return self._writer.in_flight
 
+    @property
+    def committed_steps(self) -> List[int]:
+        """Steps whose write COMMITTED through this manager (in order)."""
+        return list(self._committed)
+
+    @property
+    def failed_steps(self) -> List[Tuple[int, str]]:
+        """(step, reason) for every write that failed through this
+        manager — the source of ``LoopReport.failed_checkpoints``."""
+        return list(self._failed)
+
+    @property
+    def held_step(self) -> Optional[int]:
+        """The step the writer currently holds (snapshot taken, commit
+        pending) — retention jobs must never prune it."""
+        return self._held_step
+
+    def _resolve_world(self) -> Tuple[int, int]:
+        pid = self._pid if self._pid is not None else jax.process_index()
+        world = (self._world if self._world is not None
+                 else jax.process_count())
+        return pid, world
+
     def save(self, tree, step: int) -> Optional[str]:
         """Checkpoint ``tree``.  Synchronous mode returns the committed
         path; async mode snapshots device->host, hands the write to the
-        background thread and returns None (``wait()`` for the path)."""
-        if jax.process_count() > 1:
-            # The on-disk layout is per-process (blob_file(process_index))
-            # but the COMMIT is not yet coordinated: every process would
-            # race the same step_N.tmp and publish a manifest listing only
-            # its own shards — an unrestorable checkpoint.  Fail loudly
-            # until a barrier + process-0 manifest merge lands.
-            raise NotImplementedError(
-                "CheckpointManager.save is single-controller for now: "
-                "multi-process commit coordination (shared-dir barrier + "
-                "manifest merge on process 0) is not implemented")
+        background thread and returns None (``wait()`` for the path).
+
+        With ``process_count > 1`` every process must call ``save`` with
+        the same step: the write runs the coordinated commit protocol
+        (per-process blobs, filesystem barrier, single elected committer
+        publishing the merged manifest last — see ``ckpt.coord``)."""
+        pid, world = self._resolve_world()
+        coordinated = (self.coordinated if self.coordinated is not None
+                       else world > 1)
         with obs.span("ckpt.save", step=step, mode=self.mode):
             with obs.span("ckpt.snapshot", step=step):
                 snaps, mesh_shape, _ = sharded.snapshot_tree(
                     tree, mode=self.mode, eb=self.eb,
                     backend=self.kernel_backend,
                     min_lossy=self.min_compress_size)
-            fn = functools.partial(_write_v2, self.directory, step, snaps,
-                                   mesh_shape, self.mode, self.eb,
-                                   self.min_compress_size, self.keep,
-                                   self.log, backend=self.kernel_backend)
+            if coordinated:
+                write = functools.partial(
+                    _write_v2_coord, self.directory, step, snaps,
+                    mesh_shape, self.mode, self.eb,
+                    self.min_compress_size,
+                    self.keep if pid == 0 else None, self.log,
+                    self.kernel_backend, pid, world,
+                    self.barrier_timeout_s)
+            else:
+                write = functools.partial(
+                    _write_v2, self.directory, step, snaps, mesh_shape,
+                    self.mode, self.eb, self.min_compress_size, self.keep,
+                    self.log, backend=self.kernel_backend)
+            fn = functools.partial(self._record_outcome, write, step)
             if self.async_write:
                 # barriers on the previous write only
+                self._held_step = step
                 self._writer.submit(fn, label=f"step {step}")
                 return None
+            self._held_step = step
             return fn()
+
+    def _record_outcome(self, write: Callable[[], str], step: int) -> str:
+        """Run the write and keep the commit ledger honest."""
+        try:
+            path = write()
+        except BaseException as e:
+            self._failed.append((step, f"{type(e).__name__}: {e}"))
+            if self._held_step == step:
+                self._held_step = None
+            raise
+        self._committed.append(step)
+        # a transient failure absorbed by the writer's retry is not a
+        # failure: the commit supersedes the earlier attempts' records
+        self._failed = [(s, r) for s, r in self._failed if s != step]
+        if self._held_step == step:
+            self._held_step = None
+        return path
 
     def wait(self) -> Optional[str]:
         """Barrier: block until the in-flight write (if any) commits."""

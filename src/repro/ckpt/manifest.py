@@ -86,6 +86,64 @@ def load(path: str) -> Dict[str, Any]:
     return doc
 
 
+def _shard_size(index) -> int:
+    n = 1
+    for a, b in index:
+        n *= int(b) - int(a)
+    return n
+
+
+def check_coverage(doc: Dict[str, Any]) -> None:
+    """Validate that every leaf's shards exactly tile its shape.
+
+    A *partial commit* — a crash that published a manifest listing only a
+    subset of the writing processes' shards, or a hand-forged shard-subset
+    manifest — leaves gaps.  This check runs on manifest metadata alone
+    (no blob reads): each shard must sit within bounds, no two shards may
+    overlap, and the element counts must sum to the full leaf — together
+    that proves an exact tiling.  Raises ``IOError`` so restore treats
+    the checkpoint as corrupt and falls back (never half-restores).
+    """
+    world = int(doc.get("process_count", 1))
+    for e in doc["leaves"]:
+        shape = [int(d) for d in e["shape"]]
+        total = 1
+        for d in shape:
+            total *= d
+        shards = e["shards"]
+        if not shards and total:
+            raise IOError(f"no shards recorded for {e['name']} "
+                          f"(partial commit of a {world}-process save?)")
+        covered = 0
+        for sh in shards:
+            idx = sh["index"]
+            if len(idx) != len(shape):
+                raise IOError(f"shard rank mismatch for {e['name']}: "
+                              f"index {idx} vs shape {shape}")
+            for (a, b), dim in zip(idx, shape):
+                if not (0 <= int(a) <= int(b) <= dim):
+                    raise IOError(f"shard index {idx} out of bounds for "
+                                  f"{e['name']} (shape {shape})")
+            covered += _shard_size(idx)
+        for i in range(len(shards)):
+            for j in range(i + 1, len(shards)):
+                a, b = shards[i]["index"], shards[j]["index"]
+                if _overlap(a, b):
+                    raise IOError(f"overlapping shards for {e['name']}: "
+                                  f"{a} and {b}")
+        if covered != total:
+            raise IOError(
+                f"shards cover {covered}/{total} elements of {e['name']} "
+                f"— partial commit (manifest records process_count="
+                f"{world})")
+
+
+def _overlap(a, b) -> bool:
+    """Half-open interval intersection per dim (scalars always collide)."""
+    return all(int(x0) < int(y1) and int(y0) < int(x1)
+               for (x0, x1), (y0, y1) in zip(a, b))
+
+
 def check_tree(doc: Dict[str, Any], template_names: List[str]) -> None:
     """Template/treedef agreement: every template leaf must exist in the
     manifest and vice versa — anything else is a structural mismatch."""

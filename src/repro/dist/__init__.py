@@ -17,8 +17,8 @@ from repro.dist.collectives import (WIRE_FORMATS, code_bits,
                                     topo_quantize_dequantize_sum,
                                     topo_wire_bits)
 from repro.dist.compat import shard_map
-from repro.dist.elastic import (largest_mesh_shape, mesh_shape_dict,
-                                rebuild_mesh)
+from repro.dist.elastic import (DeviceLoss, largest_mesh_shape,
+                                mesh_shape_dict, rebuild_mesh)
 from repro.dist.ring import (packed_psum_tree, packed_wire_summary,
                              simulate_hop_bytes)
 from repro.dist.sharding import (adapt_spec, batch_axes, cache_shardings,
@@ -33,7 +33,8 @@ __all__ = [
     "topo_compressed_psum_tree", "topo_quantize_dequantize_sum",
     "topo_wire_bits",
     "packed_psum_tree", "packed_wire_summary", "simulate_hop_bytes",
-    "shard_map", "largest_mesh_shape", "mesh_shape_dict", "rebuild_mesh",
+    "shard_map", "DeviceLoss", "largest_mesh_shape", "mesh_shape_dict",
+    "rebuild_mesh",
     "adapt_spec", "batch_axes", "cache_shardings", "data_sharding",
     "param_shardings", "replicated", "spec_from_json", "spec_to_json",
 ]

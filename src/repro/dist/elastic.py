@@ -10,11 +10,32 @@ idle 3 devices while (7, 1) uses all 7 — so (7, 1) wins.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from jax.sharding import Mesh
+
+
+class DeviceLoss(RuntimeError):
+    """A device / host dropped out mid-run.
+
+    Raised by the fault-injection harness (``repro.faults``) or by a
+    cluster watchdog translating a hardware event; ``train.loop`` catches
+    it and runs mid-run elastic recovery (roll back to the last committed
+    checkpoint, rebuild the largest valid mesh, reshard, re-jit).
+
+    ``survivors`` is the explicit list of devices still alive; ``keep``
+    is the first-N shorthand the simulator uses (the loop resolves it
+    against its own device list).  Both None means "same devices, soft
+    restart" — a straggler escalation rather than real hardware loss.
+    """
+
+    def __init__(self, message: str = "device loss", survivors=None,
+                 keep: Optional[int] = None) -> None:
+        super().__init__(message)
+        self.survivors = survivors
+        self.keep = keep
 
 
 def mesh_shape_dict(mesh) -> Dict[str, int]:

@@ -1,0 +1,206 @@
+"""Deterministic, seedable fault injection for the fault-tolerance layer.
+
+The checkpoint commit protocol, the async writer, and the training loop
+are only trustworthy if every failure mode they claim to survive can be
+*produced on demand*.  This module is that switchboard: production code
+calls :func:`fire` / :func:`mangle` at named **sites**, and a test (or a
+chaos CI leg) installs a :class:`FaultPlan` mapping sites to faults.
+With no plan installed — the production default — every hook is a single
+module-global ``None`` read and returns immediately.
+
+Injectable faults (kind / canonical site):
+
+  * ``crash``        — a process dies at the site.  Raises
+    :class:`InjectedCrash` (thread-level "kill": the write aborts leaving
+    whatever is already on disk), or ``hard=True`` calls ``os._exit`` for
+    subprocess tests that need a true no-cleanup kill.  Canonical sites:
+    ``ckpt.before_barrier`` (blob written, ready marker not yet),
+    ``ckpt.before_manifest`` (committer merged, manifest not yet).
+  * ``error``        — raises ``exc(message)`` (default ``OSError``) the
+    first ``times`` hits: the transient-IO fault the async writer's retry
+    loop must absorb.  Canonical site: ``ckpt.write``.
+  * ``torn``         — :func:`mangle` corrupts bytes on their way to disk
+    (bit-flip or truncation) while the manifest keeps the hash of the
+    INTENDED bytes — a torn write the restore-time hash check must catch.
+    Canonical site: ``ckpt.blob``.
+  * ``device_loss``  — raises :class:`repro.dist.elastic.DeviceLoss` at
+    step ``at`` (``keep`` = how many devices survive): the event the
+    train loop's mid-run elastic recovery handles.  Canonical site:
+    ``loop.step``.
+
+Faults are deterministic: ``at`` pins a fault to one step, ``times``
+bounds firings, and probabilistic faults (``prob < 1``) draw from a
+``numpy`` generator seeded by the plan — the same plan replays the same
+fault sequence.
+
+Usage::
+
+    from repro import faults
+
+    plan = faults.FaultPlan({
+        "ckpt.write": faults.Fault("error", times=2),      # 2 transient IO
+        "loop.step": faults.Fault("device_loss", at=7, keep=4),
+    })
+    with faults.injected(plan):
+        ...   # run the loop; plan.fired records what actually hit
+
+The ``REPRO_FAULTS=1`` CI leg runs the chaos suite (tests/test_faults.py,
+tests/test_ckpt_coord.py) with plans installed per test.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+KINDS = ("crash", "error", "torn", "device_loss")
+
+
+class InjectedFault(RuntimeError):
+    """Base class for every injected failure (so tests can catch broadly)."""
+
+
+class InjectedCrash(InjectedFault):
+    """A simulated process kill at an injection site."""
+
+
+@dataclass
+class Fault:
+    """One injectable fault bound to a site by :class:`FaultPlan`.
+
+    Args:
+      kind:    'crash' | 'error' | 'torn' | 'device_loss'.
+      at:      only fire when the site reports ``step == at`` (None = any).
+      times:   maximum number of firings (None = unlimited).
+      prob:    per-hit firing probability (drawn from the plan's seeded rng).
+      exc:     exception type for ``kind='error'``.
+      message: message carried by the raised exception.
+      hard:    ``kind='crash'``: ``os._exit(13)`` instead of raising —
+               a true no-cleanup kill for subprocess tests.
+      keep:    ``kind='device_loss'``: how many devices survive.
+      torn:    ``kind='torn'``: 'flip' (XOR a span) or 'truncate'.
+      nbytes:  ``kind='torn'``: how many bytes to flip / chop.
+    """
+    kind: str
+    at: Optional[int] = None
+    times: Optional[int] = 1
+    prob: float = 1.0
+    exc: type = OSError
+    message: str = "injected fault"
+    hard: bool = False
+    keep: Optional[int] = None
+    torn: str = "flip"
+    nbytes: int = 64
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {KINDS})")
+
+
+class FaultPlan:
+    """Site -> :class:`Fault` map with deterministic firing bookkeeping.
+
+    ``fired`` records every (site, ctx) that actually hit, in order —
+    tests assert against it.  Thread-safe: the async writer thread and
+    the step loop may both hit sites concurrently.
+    """
+
+    def __init__(self, sites: Dict[str, Fault], seed: int = 0) -> None:
+        import numpy as np
+        self.sites = dict(sites)
+        self._left = {s: f.times for s, f in self.sites.items()}
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self.fired: List[Tuple[str, Dict[str, Any]]] = []
+
+    def _matches(self, site: str, ctx: Dict[str, Any]) -> Optional[Fault]:
+        f = self.sites.get(site)
+        if f is None:
+            return None
+        with self._lock:
+            if f.at is not None and ctx.get("step") != f.at:
+                return None
+            left = self._left[site]
+            if left is not None and left <= 0:
+                return None
+            if f.prob < 1.0 and float(self._rng.random()) >= f.prob:
+                return None
+            if left is not None:
+                self._left[site] = left - 1
+            self.fired.append((site, dict(ctx)))
+        return f
+
+    def fire(self, site: str, **ctx: Any) -> None:
+        f = self._matches(site, ctx)
+        if f is None or f.kind == "torn":
+            return
+        if f.kind == "crash":
+            if f.hard:
+                os._exit(13)
+            raise InjectedCrash(f"{f.message} at {site} ({ctx})")
+        if f.kind == "error":
+            raise f.exc(f"{f.message} at {site} ({ctx})")
+        # device_loss
+        from repro.dist.elastic import DeviceLoss
+        raise DeviceLoss(f"{f.message} at {site} ({ctx})", keep=f.keep)
+
+    def mangle(self, site: str, data: bytes, **ctx: Any) -> bytes:
+        f = self.sites.get(site)
+        if f is None or f.kind != "torn":
+            return data
+        f = self._matches(site, ctx)
+        if f is None:
+            return data
+        if f.torn == "truncate":
+            return data[: max(0, len(data) - min(f.nbytes, len(data)))]
+        off = len(data) // 2
+        span = min(f.nbytes, len(data) - off)
+        torn = bytearray(data)
+        for i in range(span):
+            torn[off + i] ^= 0xFF
+        return bytes(torn)
+
+
+# -- module-global hook: production paths pay exactly one read of _PLAN ----
+
+_PLAN: Optional[FaultPlan] = None
+
+
+def active() -> Optional[FaultPlan]:
+    return _PLAN
+
+
+def install(plan: FaultPlan) -> None:
+    global _PLAN
+    _PLAN = plan
+
+
+def clear() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+@contextmanager
+def injected(plan: FaultPlan):
+    """Install ``plan`` for the duration of the block (always cleared)."""
+    install(plan)
+    try:
+        yield plan
+    finally:
+        clear()
+
+
+def fire(site: str, **ctx: Any) -> None:
+    """Raise the configured fault for ``site`` (no-op with no plan)."""
+    if _PLAN is not None:
+        _PLAN.fire(site, **ctx)
+
+
+def mangle(site: str, data: bytes, **ctx: Any) -> bytes:
+    """Return ``data`` as it will land on disk (torn when configured)."""
+    if _PLAN is None:
+        return data
+    return _PLAN.mangle(site, data, **ctx)

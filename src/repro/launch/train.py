@@ -13,7 +13,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import faults, obs
 from repro.ckpt import CheckpointManager
 from repro.data import token_batches
 from repro.dist.compat import HAS_PARTIAL_AUTO
@@ -46,6 +46,21 @@ def main():
     ap.add_argument("--ckpt-sync", action="store_true",
                     help="serialize+fsync on the step loop thread instead "
                          "of the async background writer")
+    ap.add_argument("--max-recoveries", type=int, default=0,
+                    help="how many mid-run device-loss events the loop "
+                         "absorbs by rolling back to the last committed "
+                         "checkpoint and rebuilding the mesh (0 = crash, "
+                         "the pre-elastic behavior)")
+    ap.add_argument("--barrier-timeout", type=float, default=None,
+                    metavar="S",
+                    help="coordinated-commit barrier timeout in seconds "
+                         "(multi-process saves; default 120)")
+    ap.add_argument("--inject-device-loss", default=None,
+                    metavar="STEP[:KEEP]",
+                    help="fault injection: raise a DeviceLoss at STEP, "
+                         "keeping the first KEEP devices (default: all, "
+                         "i.e. a soft restart); exercises the elastic "
+                         "recovery path end to end")
     ap.add_argument("--kernel-backend",
                     choices=["auto", "pallas", "interpret", "jnp"],
                     default=None,
@@ -114,6 +129,9 @@ def main():
 
     manager = None
     if args.ckpt_dir is not None:
+        mgr_kw = {}
+        if args.barrier_timeout is not None:
+            mgr_kw["barrier_timeout_s"] = args.barrier_timeout
         manager = CheckpointManager(
             args.ckpt_dir,
             mode=args.ckpt_mode if args.ckpt_mode is not None
@@ -121,17 +139,41 @@ def main():
             eb=args.ckpt_eb if args.ckpt_eb is not None else cfg.ckpt_eb,
             async_write=cfg.ckpt_async and not args.ckpt_sync,
             kernel_backend=args.kernel_backend if args.kernel_backend
-            is not None else cfg.kernel_backend)
+            is not None else cfg.kernel_backend, **mgr_kw)
+
+    if args.inject_device_loss is not None:
+        step_s, _, keep_s = args.inject_device_loss.partition(":")
+        faults.install(faults.FaultPlan(sites={
+            "loop.step": faults.Fault(
+                kind="device_loss", at=int(step_s),
+                keep=int(keep_s) if keep_s else None)}))
+
+    def rebuild_step(new_mesh):
+        # shard_map steps close over the mesh; rebuild against the one
+        # the elastic recovery produced (and point the models at it)
+        if not args.grad_compress or HAS_PARTIAL_AUTO:
+            set_active_mesh(new_mesh)
+        return make_train_step(cfg, optimizer, mesh=new_mesh,
+                               grad_compress=args.grad_compress,
+                               rel_eb=args.rel_eb,
+                               topo_frac=args.topo_frac,
+                               wire_format=args.wire_format)
 
     ctx = mesh if mesh is not None else _nullcontext()
     with ctx:
         state, report = train_loop(
             state, step_fn, batches(), num_steps=args.steps,
             ckpt_manager=manager, ckpt_every=args.ckpt_every,
-            mesh=mesh, model_parallel=args.model_parallel)
+            mesh=mesh, model_parallel=args.model_parallel,
+            max_recoveries=args.max_recoveries,
+            rebuild_step=rebuild_step if args.max_recoveries else None)
     if report.resharded:
         print(f"[train] elastic restore: checkpoint mesh "
               f"{report.saved_mesh} resharded onto {report.restore_mesh}")
+    for ev in report.recoveries:
+        print(f"[train] recovered from device loss at step {ev['step']}: "
+              f"rolled back to {ev['restored_from']}, mesh {ev['mesh']} "
+              f"({ev['recovery_s'] * 1e3:.0f} ms)")
     print(f"[train] done: loss {report.losses[0]:.4f} -> "
           f"{report.losses[-1]:.4f} over {report.steps_run} steps; "
           f"stragglers={len(report.straggler_events)}")

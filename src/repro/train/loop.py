@@ -1,16 +1,31 @@
 """Fault-tolerant training loop: checkpoint/restart, straggler detection,
-preemption simulation hooks.
+mid-run elastic recovery, preemption simulation hooks.
 
 Designed for 1000+-node operation:
   * checkpoint every N steps — either through the legacy v1 module API
     (``ckpt_dir``) or through a v2 ``ckpt.CheckpointManager``
     (``ckpt_manager``: sharded blobs, szp/toposzp leaf compression, async
-    background writes) — restore on start so a preempted job resumes;
+    background writes, coordinated multi-process commit) — restore on
+    start so a preempted job resumes;
   * elasticity: when the checkpoint was written on a different mesh shape
     than the current world (device loss / regrowth), the loop rebuilds the
     largest valid mesh from the surviving devices via
     ``dist.elastic.rebuild_mesh`` and the manager reassembles + reshards
     every leaf onto it (saved PartitionSpecs adapted to the new mesh);
+  * **mid-run** elasticity (``max_recoveries > 0``): a
+    ``dist.elastic.DeviceLoss`` raised during a step — by the fault
+    injector (``repro.faults``, site ``loop.step``) or a watchdog
+    translating a hardware event — rolls the loop back to the async
+    writer's last *committed* checkpoint, rebuilds the largest valid mesh
+    from the survivors, reshards the restored state, re-jits the step
+    (``rebuild_step`` builds a new step_fn against the new mesh) and
+    keeps training — graceful degradation instead of a full restart.
+    Counters: ``loop.recoveries``; per-event detail in
+    ``LoopReport.recoveries``;
+  * checkpoint accounting is reconciled against the manager's commit
+    ledger: a checkpoint enters ``report.checkpoints`` only once its
+    write actually COMMITTED; failed background writes land in
+    ``report.failed_checkpoints`` instead of leaving phantom entries;
   * straggler mitigation: per-step wall time tracked with an EWMA; a step
     slower than ``straggler_z`` sigmas triggers the mitigation hook (on a
     real cluster: reshard/evict; here: recorded event + callback).
@@ -19,12 +34,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
-from repro import obs
+from repro import faults, obs
 from repro.ckpt import manager as ckpt
+from repro.ckpt.async_writer import AsyncWriteError
+from repro.dist.elastic import DeviceLoss
 from repro.train.state import TrainState
 
 
@@ -36,9 +53,11 @@ class LoopReport:
     straggler_events: List[int] = field(default_factory=list)
     restored_from: Optional[int] = None
     checkpoints: List[int] = field(default_factory=list)
+    failed_checkpoints: List[int] = field(default_factory=list)
     resharded: bool = False                      # elastic restore happened
     restore_mesh: Optional[Dict[str, int]] = None  # mesh restored onto
     saved_mesh: Optional[Dict[str, int]] = None    # mesh the ckpt was on
+    recoveries: List[Dict[str, Any]] = field(default_factory=list)
 
 
 class PreemptionError(RuntimeError):
@@ -78,6 +97,56 @@ def _elastic_restore(manager, state, mesh, model_parallel, devices, report,
     return res.tree
 
 
+def _recover(exc: DeviceLoss, at_step: int, manager, state, step_fn,
+             rebuild_step, model_parallel, devices, report, log
+             ) -> Tuple[Any, int, Callable, Any]:
+    """Mid-run elastic recovery: roll back to the last COMMITTED
+    checkpoint, rebuild the largest valid mesh from the survivors,
+    reshard, re-jit.  Returns (state, resume_step, compiled, mesh).
+
+    Raises the original ``exc`` when there is nothing committed to roll
+    back to — losing devices before the first checkpoint is a restart,
+    not a recovery."""
+    from repro.dist.elastic import mesh_shape_dict, rebuild_mesh
+
+    t0 = time.perf_counter()
+    obs.counter_add("loop.recoveries", 1)
+    try:
+        manager.wait()    # flush/surface the in-flight write first
+    except Exception as e:
+        # a failed background write just means the last COMMITTED
+        # checkpoint is older; the rollback below handles it
+        log(f"[loop] in-flight checkpoint failed during recovery: {e}")
+    world = devices if devices is not None else jax.devices()
+    if exc.survivors is not None:
+        survivors = list(exc.survivors)
+    elif exc.keep is not None:
+        survivors = list(world)[: exc.keep]
+    else:
+        survivors = list(world)   # soft restart: same devices
+    if not survivors:
+        raise exc
+    new_mesh = rebuild_mesh(survivors, model_parallel)
+    res = manager.restore(state, mesh=new_mesh)
+    if res is None:
+        log(f"[loop] device loss at step {at_step} with no committed "
+            f"checkpoint to roll back to — giving up")
+        raise exc
+    fn = rebuild_step(new_mesh) if rebuild_step is not None else step_fn
+    compiled = jax.jit(fn, donate_argnums=(0,))
+    dt = time.perf_counter() - t0
+    event = {"step": at_step, "reason": str(exc),
+             "restored_from": res.step,
+             "mesh": mesh_shape_dict(new_mesh),
+             "devices": len(survivors), "recovery_s": dt}
+    report.recoveries.append(event)
+    obs.observe("loop.recovery_s", dt)
+    log(f"[loop] recovered from device loss at step {at_step}: rolled "
+        f"back to step {res.step}, resharded onto {event['mesh']} "
+        f"({len(survivors)} devices, {dt * 1e3:.0f} ms)")
+    return res.tree, int(res.step), compiled, new_mesh
+
+
 def train_loop(state: TrainState, step_fn: Callable, data_iter,
                num_steps: int, ckpt_dir: Optional[str] = None,
                ckpt_every: int = 50, log_every: int = 10,
@@ -87,6 +156,8 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
                ckpt_compress: Optional[str] = None,
                ckpt_manager: Optional[ckpt.CheckpointManager] = None,
                mesh=None, model_parallel: int = 1, devices=None,
+               max_recoveries: int = 0,
+               rebuild_step: Optional[Callable] = None,
                log: Callable[[str], None] = print
                ) -> Tuple[TrainState, LoopReport]:
     """Run ``num_steps`` with full fault-tolerance plumbing.
@@ -96,6 +167,13 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
     restore: a checkpoint saved on a different mesh shape is resharded
     onto ``mesh`` or, when no mesh is passed, onto
     ``dist.elastic.rebuild_mesh(devices or jax.devices(), model_parallel)``.
+
+    ``max_recoveries`` bounds how many mid-run ``DeviceLoss`` events the
+    loop absorbs by rolling back to the last committed checkpoint and
+    rebuilding the mesh (0 = re-raise, the pre-elastic behavior);
+    ``rebuild_step`` is called with the rebuilt mesh to produce a fresh
+    step_fn (shard_map-based steps close over the mesh and must be
+    rebuilt; pure jit steps may leave it None).
     """
     report = LoopReport()
 
@@ -111,16 +189,31 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
 
     compiled = jax.jit(step_fn, donate_argnums=(0,))
     ewma_t, ewma_var = None, 0.0
+    recoveries_left = max_recoveries
+    submitted: List[int] = []
 
     start = int(state.step)
-    for i in range(start, num_steps):
+    i = start
+    while i < num_steps:
         if preempt_at is not None and i == preempt_at:
             raise PreemptionError(f"simulated preemption at step {i}")
-        batch = next(data_iter)
-        t0 = time.perf_counter()
-        state, metrics = compiled(state, batch)
-        jax.block_until_ready(metrics["loss"])
-        dt = time.perf_counter() - t0
+        try:
+            faults.fire("loop.step", step=i)
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            state, metrics = compiled(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+        except DeviceLoss as e:
+            if recoveries_left <= 0 or ckpt_manager is None:
+                raise
+            recoveries_left -= 1
+            state, i, compiled, mesh = _recover(
+                e, i, ckpt_manager, state, step_fn, rebuild_step,
+                model_parallel, devices, report, log)
+            start = min(start, i)
+            ewma_t, ewma_var = None, 0.0   # step time changed regime
+            continue
 
         # straggler detection (EWMA z-score on step time)
         if ewma_t is None:
@@ -148,15 +241,23 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
                 # pull-style snapshot of the hot-path registries; reading
                 # it costs host dict walks only, never a device transfer
                 log("[obs] " + obs.summary_line(
-                    ("train.", "ckpt.", "ring.", "collectives.",
+                    ("train.", "ckpt.", "loop.", "ring.", "collectives.",
                      "szp.", "toposzp.")))
 
         if (i + 1) % ckpt_every == 0:
             if ckpt_manager is not None:
                 # async mode: pays only the device->host snapshot here
                 # (plus a barrier iff the previous write is in flight).
-                ckpt_manager.save(state, i + 1)
-                report.checkpoints.append(i + 1)
+                # A checkpoint is RECORDED only once its write commits —
+                # see the reconcile against the manager's ledger below.
+                try:
+                    ckpt_manager.save(state, i + 1)
+                except AsyncWriteError as e:
+                    # the PREVIOUS write failed at this submit's barrier;
+                    # the slot is free now, so resubmit this step
+                    log(f"[loop] background checkpoint failed: {e}")
+                    ckpt_manager.save(state, i + 1)
+                submitted.append(i + 1)
                 log(f"[loop] checkpoint @ step {i + 1} "
                     f"({'async' if ckpt_manager.async_write else 'sync'})")
             elif ckpt_dir is not None:
@@ -165,7 +266,20 @@ def train_loop(state: TrainState, step_fn: Callable, data_iter,
                 ckpt.prune(ckpt_dir)
                 report.checkpoints.append(i + 1)
                 log(f"[loop] checkpoint -> {path}")
+        i += 1
 
     if ckpt_manager is not None:
-        ckpt_manager.wait()   # commit the trailing async write before exit
+        try:
+            ckpt_manager.wait()   # commit the trailing async write
+        except AsyncWriteError as e:
+            log(f"[loop] trailing checkpoint failed: {e}")
+        # Reconcile against the manager's commit ledger: only steps whose
+        # write actually committed count; failures are reported, not
+        # silently dropped (nor left as phantom checkpoints).
+        committed = set(ckpt_manager.committed_steps)
+        failed = dict(ckpt_manager.failed_steps)
+        report.checkpoints = sorted(s for s in set(submitted)
+                                    if s in committed)
+        report.failed_checkpoints = sorted(s for s in set(submitted)
+                                           if s in failed)
     return state, report

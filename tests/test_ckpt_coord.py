@@ -1,0 +1,386 @@
+"""Coordinated multi-process checkpoint commit (repro.ckpt.coord): the
+filesystem barrier, single-committer election/merge, crash windows at
+every protocol point, and shard-coverage validation on restore.
+
+Most tests drive ``_write_v2_coord`` directly with hand-built per-process
+``LeafSnap`` halves — a single JAX process addresses all shards, so the
+manager's own ``snapshot_tree`` cannot produce disjoint per-process shard
+sets — running the "processes" as threads (the protocol only touches the
+shared directory, never process state).  One test runs two REAL OS
+processes against a shared directory to prove the protocol needs no
+shared memory.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.ckpt import BarrierTimeout, CheckpointManager
+from repro.ckpt import coord
+from repro.ckpt import manifest as mf
+from repro.ckpt.manager import _write_v2_coord
+from repro.ckpt.sharded import LeafSnap, ShardSnap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _no_fault_leak():
+    yield
+    faults.clear()
+
+
+def _field(ny=32, nx=24, seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        (ny, nx)).astype(np.float32)
+
+
+def _row_half_snaps(arr, pid, world=2, name="w"):
+    """The LeafSnap a process holding rows [pid*ny/world, ...) would
+    snapshot: only ITS half, with the global [start, stop) index."""
+    ny = arr.shape[0]
+    lo, hi = pid * ny // world, (pid + 1) * ny // world
+    return [LeafSnap(name, tuple(arr.shape), str(arr.dtype), None,
+                     [ShardSnap(((lo, hi), (0, arr.shape[1])),
+                                arr[lo:hi])])]
+
+
+def _run_coord(d, step, snaps, pid, world, timeout_s=30.0, keep=None,
+               errs=None):
+    try:
+        _write_v2_coord(str(d), step, snaps, None, "raw", 1e-4, 4096,
+                        keep, None, None, pid, world, timeout_s)
+    except BaseException as e:           # noqa: BLE001 — recorded for asserts
+        if errs is None:
+            raise
+        errs[pid] = e
+
+
+def _coord_threads(d, step, arr, world=2, timeout_s=30.0, errs=None):
+    ts = [threading.Thread(target=_run_coord,
+                           args=(d, step, _row_half_snaps(arr, p, world), p,
+                                 world, timeout_s, None, errs))
+          for p in range(world)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(60)
+    return errs
+
+
+# --------------------------------------------------------------------------
+# happy path: barrier + merge + single publish
+# --------------------------------------------------------------------------
+
+def test_coordinated_commit_merges_both_processes(tmp_path):
+    arr = _field()
+    _coord_threads(tmp_path, 5, arr)
+    final = tmp_path / "step_00000005"
+    assert final.is_dir() and not (tmp_path / "step_00000005.tmp").exists()
+    doc = json.load(open(final / "manifest.json"))
+    assert doc["process_count"] == 2
+    assert sorted(sh["file"] for sh in doc["leaves"][0]["shards"]) == \
+        ["shards_p0000.bin", "shards_p0001.bin"]
+    mf.check_coverage(doc)               # the merge tiles the leaf exactly
+    assert not list(final.glob("ready.*"))   # markers are protocol state
+
+    # restore reassembles the halves — on any manager, no world needed
+    mgr = CheckpointManager(str(tmp_path), log=None)
+    res = mgr.restore({"w": jnp.zeros(arr.shape, jnp.float32)})
+    assert res.step == 5
+    assert np.array_equal(np.asarray(res.tree["w"]), arr)
+
+
+def test_late_joiner_within_timeout_commits(tmp_path):
+    arr = _field(seed=1)
+
+    def late(pid):
+        if pid == 1:
+            time.sleep(0.3)              # well inside the barrier timeout
+        _run_coord(tmp_path, 2, _row_half_snaps(arr, pid), pid, 2)
+
+    ts = [threading.Thread(target=late, args=(p,)) for p in range(2)]
+    [t.start() for t in ts]
+    [t.join(60) for t in ts]
+    mgr = CheckpointManager(str(tmp_path), log=None)
+    res = mgr.restore({"w": jnp.zeros(arr.shape, jnp.float32)})
+    assert res.step == 2
+    assert np.array_equal(np.asarray(res.tree["w"]), arr)
+
+
+def test_two_real_processes_commit_over_shared_dir(tmp_path):
+    """The protocol's only medium is the shared directory: two separate
+    OS processes (no threads, no shared memory) commit one checkpoint."""
+    py = (
+        "import sys, numpy as np\n"
+        "from repro.ckpt.manager import _write_v2_coord\n"
+        "from repro.ckpt.sharded import LeafSnap, ShardSnap\n"
+        "d, pid = sys.argv[1], int(sys.argv[2])\n"
+        "arr = np.arange(48, dtype=np.float32).reshape(8, 6)\n"
+        "lo, hi = pid * 4, pid * 4 + 4\n"
+        "snaps = [LeafSnap('w', (8, 6), 'float32', None,\n"
+        "                  [ShardSnap(((lo, hi), (0, 6)), arr[lo:hi])])]\n"
+        "_write_v2_coord(d, 7, snaps, None, 'raw', 1e-4, 4096, None,\n"
+        "                None, None, pid, 2, 60.0)\n"
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    procs = [subprocess.Popen([sys.executable, "-c", py, str(tmp_path),
+                               str(p)], env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True)
+             for p in range(2)]
+    for p in procs:
+        _, err = p.communicate(timeout=240)
+        assert p.returncode == 0, err
+    mgr = CheckpointManager(str(tmp_path), log=None)
+    res = mgr.restore({"w": jnp.zeros((8, 6), jnp.float32)})
+    assert res.step == 7
+    assert np.array_equal(np.asarray(res.tree["w"]),
+                          np.arange(48, dtype=np.float32).reshape(8, 6))
+
+
+# --------------------------------------------------------------------------
+# crash windows: every abort leaves NO commit marker
+# --------------------------------------------------------------------------
+
+def test_barrier_timeout_when_peer_never_arrives(tmp_path):
+    arr = _field()
+    # a prior good checkpoint the job must be able to fall back to
+    mgr = CheckpointManager(str(tmp_path), async_write=False, log=None)
+    mgr.save({"w": jnp.asarray(arr)}, 1)
+
+    with pytest.raises(BarrierTimeout):
+        _run_coord(tmp_path, 2, _row_half_snaps(arr, 0), 0, 2,
+                   timeout_s=0.3)
+    assert not (tmp_path / "step_00000002").exists()   # never published
+    res = CheckpointManager(str(tmp_path), log=None).restore(
+        {"w": jnp.zeros(arr.shape, jnp.float32)})
+    assert res.step == 1                               # fell back cleanly
+
+
+def test_crash_before_barrier_abandons_checkpoint(tmp_path):
+    """A process killed after its blob but before its READY marker: the
+    survivor's barrier expires and the checkpoint is abandoned — no
+    manifest anywhere, tmp left for the next attempt to reuse."""
+    arr = _field()
+    faults.install(faults.FaultPlan({
+        "ckpt.before_barrier": faults.Fault("crash", times=1)}))
+    errs = {}
+    _coord_threads(tmp_path, 3, arr, timeout_s=0.5, errs=errs)
+    kinds = sorted(type(e).__name__ for e in errs.values())
+    assert kinds == ["BarrierTimeout", "InjectedCrash"], errs
+    assert not (tmp_path / "step_00000003").exists()
+    assert (tmp_path / "step_00000003.tmp").is_dir()   # torn tmp, no marker
+    assert CheckpointManager(str(tmp_path), log=None).restore(
+        {"w": jnp.zeros(arr.shape, jnp.float32)}) is None
+
+
+def test_crash_before_manifest_committer_death_leaves_no_manifest(tmp_path):
+    """The committer dies AFTER the merge, BEFORE the manifest: the
+    non-committer's publish wait expires; nothing is restorable from this
+    step and the torn tmp holds no commit marker."""
+    arr = _field()
+    faults.install(faults.FaultPlan({
+        "ckpt.before_manifest": faults.Fault("crash", times=1)}))
+    errs = {}
+    # the survivor's publish wait runs this timeout to completion; the
+    # barrier half must never expire (markers outlive a pre-manifest
+    # committer death by construction), so it only needs slack for two
+    # thread marker writes under a loaded machine
+    _coord_threads(tmp_path, 4, arr, timeout_s=2.0, errs=errs)
+    kinds = sorted(type(e).__name__ for e in errs.values())
+    assert kinds == ["CommitTimeout", "InjectedCrash"], errs
+    assert not (tmp_path / "step_00000004").exists()
+    assert not (tmp_path / "step_00000004.tmp" / "manifest.json").exists()
+    assert CheckpointManager(str(tmp_path), log=None).restore(
+        {"w": jnp.zeros(arr.shape, jnp.float32)}) is None
+
+
+def test_retry_after_abort_reuses_the_shared_tmp(tmp_path):
+    """An aborted attempt (torn tmp with one stale blob + marker) must not
+    poison the NEXT attempt of the same step: each process clears only its
+    own stale files and the barrier sees exactly world fresh markers."""
+    arr = _field()
+    faults.install(faults.FaultPlan({
+        "ckpt.before_barrier": faults.Fault("crash", times=1)}))
+    errs = {}
+    _coord_threads(tmp_path, 6, arr, timeout_s=0.5, errs=errs)
+    assert not (tmp_path / "step_00000006").exists()
+    faults.clear()
+    _coord_threads(tmp_path, 6, arr)                   # retry commits
+    res = CheckpointManager(str(tmp_path), log=None).restore(
+        {"w": jnp.zeros(arr.shape, jnp.float32)})
+    assert res.step == 6
+    assert np.array_equal(np.asarray(res.tree["w"]), arr)
+
+
+# --------------------------------------------------------------------------
+# marker / fragment validation (committer side)
+# --------------------------------------------------------------------------
+
+def test_stale_marker_from_another_commit_rejected(tmp_path):
+    os.makedirs(tmp_path / "s")
+    coord.write_ready(str(tmp_path / "s"), 0, step=9, world=1,
+                      fname="shards_p0000.bin", nbytes=0, mesh_shape=None,
+                      entries=[])
+    (tmp_path / "s" / "shards_p0000.bin").write_bytes(b"")
+    with pytest.raises(IOError, match="another commit"):
+        coord.load_fragments(str(tmp_path / "s"), step=8, world=1)
+
+
+def test_marker_nbytes_mismatch_rejected(tmp_path):
+    os.makedirs(tmp_path / "s")
+    coord.write_ready(str(tmp_path / "s"), 0, step=1, world=1,
+                      fname="shards_p0000.bin", nbytes=64, mesh_shape=None,
+                      entries=[])
+    (tmp_path / "s" / "shards_p0000.bin").write_bytes(b"\x00" * 32)
+    with pytest.raises(IOError, match="torn write"):
+        coord.load_fragments(str(tmp_path / "s"), step=1, world=1)
+
+
+def test_merge_rejects_metadata_disagreement():
+    def frag(pid, shape):
+        return {"pid": pid, "step": 1, "world": 2, "mesh": None,
+                "file": mf.blob_file(pid), "nbytes": 0,
+                "leaves": [{"name": "w", "shape": shape,
+                            "dtype": "float32", "mode": "raw",
+                            "spec": None, "shards": []}]}
+    with pytest.raises(IOError, match="disagree on w.shape"):
+        coord.merge_fragments([frag(0, [8, 6]), frag(1, [6, 8])], 1, 2)
+
+
+def test_barrier_satisfied_by_published_commit(tmp_path):
+    """Publish race: a fast committer consumes the markers and renames
+    tmp away before a slow peer re-polls — seeing the published manifest
+    must satisfy the peer's barrier instead of stranding it to timeout."""
+    final = tmp_path / "step_00000001"
+    os.makedirs(final)
+    (final / "manifest.json").write_text("{}")
+    pids = coord.wait_for_ready(str(tmp_path / "step_00000001.tmp"), 2,
+                                timeout_s=1.0, final=str(final))
+    assert pids == [0, 1]
+
+
+def test_extra_ready_marker_fails_the_barrier(tmp_path):
+    """Markers beyond world (stale pids from a larger previous job) are a
+    protocol violation, not silently merged."""
+    os.makedirs(tmp_path / "s")
+    for pid in (0, 2):                                 # pid 2 of world 2?!
+        coord.write_ready(str(tmp_path / "s"), pid, step=1, world=2,
+                          fname=mf.blob_file(pid), nbytes=0,
+                          mesh_shape=None, entries=[])
+    with pytest.raises(IOError, match="do not match world"):
+        coord.wait_for_ready(str(tmp_path / "s"), 2, timeout_s=1.0)
+
+
+# --------------------------------------------------------------------------
+# shard-coverage validation on restore
+# --------------------------------------------------------------------------
+
+def _forge_manifest(final, mutate):
+    doc = json.load(open(os.path.join(final, "manifest.json")))
+    mutate(doc)
+    json.dump(doc, open(os.path.join(final, "manifest.json"), "w"))
+
+
+def test_coverage_rejects_shard_subset_manifest(tmp_path):
+    """A manifest listing only one process's shards (the partial commit a
+    crashed committer could in principle produce) restores NOTHING: the
+    coverage check detects the gap from metadata alone and falls back."""
+    arr = _field()
+    mgr = CheckpointManager(str(tmp_path), async_write=False, log=None)
+    mgr.save({"w": jnp.asarray(arr)}, 1)               # good fallback
+    _coord_threads(tmp_path, 2, arr)
+    final = str(tmp_path / "step_00000002")
+
+    def drop_p1(doc):
+        e = doc["leaves"][0]
+        e["shards"] = [sh for sh in e["shards"]
+                       if sh["file"] == "shards_p0000.bin"]
+    _forge_manifest(final, drop_p1)
+    logs = []
+    res = CheckpointManager(str(tmp_path), log=logs.append).restore(
+        {"w": jnp.zeros(arr.shape, jnp.float32)})
+    assert res.step == 1                               # fell back past it
+    assert any("partial commit" in ln for ln in logs), logs
+
+
+def test_coverage_rejects_overlapping_shards(tmp_path):
+    arr = _field()
+    _coord_threads(tmp_path, 1, arr)
+    final = str(tmp_path / "step_00000001")
+
+    def overlap(doc):
+        e = doc["leaves"][0]
+        e["shards"][1]["index"] = e["shards"][0]["index"]
+    _forge_manifest(final, overlap)
+    logs = []
+    assert CheckpointManager(str(tmp_path), log=logs.append).restore(
+        {"w": jnp.zeros(arr.shape, jnp.float32)}) is None
+    assert any("overlapping shards" in ln for ln in logs), logs
+
+
+def test_check_coverage_accepts_exact_tiling():
+    doc = mf.build(1, [mf.leaf_entry("w", (8, 6), "float32", "raw", 0, None,
+                                     [{"file": "f", "offset": 0,
+                                       "nbytes": 96, "sha256": "",
+                                       "index": [[0, 4], [0, 6]]},
+                                      {"file": "f", "offset": 96,
+                                       "nbytes": 96, "sha256": "",
+                                       "index": [[4, 8], [0, 6]]}])],
+                   None, 2)
+    mf.check_coverage(doc)                             # no raise
+
+
+def test_check_coverage_rejects_out_of_bounds():
+    doc = mf.build(1, [mf.leaf_entry("w", (8, 6), "float32", "raw", 0, None,
+                                     [{"file": "f", "offset": 0,
+                                       "nbytes": 0, "sha256": "",
+                                       "index": [[0, 9], [0, 6]]}])],
+                   None, 1)
+    with pytest.raises(IOError, match="out of bounds"):
+        mf.check_coverage(doc)
+
+
+def test_check_coverage_rejects_duplicate_scalar_shards():
+    doc = mf.build(1, [mf.leaf_entry("s", (), "int32", "raw", 0, None,
+                                     [{"file": "f", "offset": 0,
+                                       "nbytes": 4, "sha256": "",
+                                       "index": []},
+                                      {"file": "f", "offset": 4,
+                                       "nbytes": 4, "sha256": "",
+                                       "index": []}])],
+                   None, 2)
+    with pytest.raises(IOError, match="overlapping"):
+        mf.check_coverage(doc)
+
+
+# --------------------------------------------------------------------------
+# manager-level routing
+# --------------------------------------------------------------------------
+
+def test_manager_world1_coordinated_matches_plain(tmp_path):
+    """coordinated=True with world 1 runs the full protocol (ready marker,
+    barrier, self-election, merge) and produces a checkpoint a plain
+    manager restores bit-exactly — the basis of the bench's
+    commit_barrier_overhead measurement."""
+    tree = {"w": jnp.asarray(_field()), "n": jnp.int32(3)}
+    mgr = CheckpointManager(str(tmp_path / "coord"), async_write=False,
+                            log=None, coordinated=True, process_index=0,
+                            process_count=1)
+    mgr.save(tree, 4)
+    doc = json.load(open(tmp_path / "coord" / "step_00000004"
+                         / "manifest.json"))
+    assert doc["process_count"] == 1
+    res = CheckpointManager(str(tmp_path / "coord"), log=None).restore(
+        {"w": jnp.zeros((32, 24), jnp.float32), "n": jnp.int32(0)})
+    assert res.step == 4
+    assert np.array_equal(np.asarray(res.tree["w"]),
+                          np.asarray(tree["w"]))
+    assert int(res.tree["n"]) == 3

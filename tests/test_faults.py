@@ -1,0 +1,425 @@
+"""Fault-injection chaos suite (repro.faults): every failure mode the
+fault-tolerance layer claims to survive, produced on demand.
+
+The invariant asserted throughout: an injected fault either FULLY
+recovers (retry absorbed it, or the loop rolled back and kept training)
+or fails LOUDLY — and in every case the latest committed checkpoint
+stays intact and restorable.
+
+Test names carry the fault keywords the nightly matrix selects with
+``-k``: crash_before_barrier (tests/test_ckpt_coord.py),
+crash_before_manifest, torn_blob, transient_io, device_loss.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults, obs
+from repro.ckpt import AsyncWriteError, AsyncWriter, CheckpointManager
+from repro.dist.elastic import DeviceLoss
+from repro.train import TrainState, train_loop
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _isolated():
+    was = obs.enabled()
+    obs.reset()
+    faults.clear()
+    yield
+    faults.clear()
+    obs.set_enabled(was)
+    obs.reset()
+
+
+def _field(seed=0):
+    return np.random.default_rng(seed).standard_normal(
+        (48, 32)).astype(np.float32)
+
+
+def _counters():
+    return obs.default_registry().snapshot()["counters"]
+
+
+# --------------------------------------------------------------------------
+# the switchboard itself
+# --------------------------------------------------------------------------
+
+def test_hooks_are_noops_without_a_plan():
+    faults.fire("ckpt.write", step=1)          # nothing raised
+    assert faults.mangle("ckpt.blob", b"abc") == b"abc"
+    assert faults.active() is None
+
+
+def test_fault_matching_is_deterministic_and_bounded():
+    plan = faults.FaultPlan({
+        "a": faults.Fault("error", times=2),
+        "b": faults.Fault("error", at=5),
+    }, seed=7)
+    with faults.injected(plan):
+        for _ in range(2):
+            with pytest.raises(OSError):
+                faults.fire("a")
+        faults.fire("a")                        # budget of 2 exhausted
+        faults.fire("b", step=4)                # wrong step: no fire
+        with pytest.raises(OSError):
+            faults.fire("b", step=5)
+    assert [s for s, _ in plan.fired] == ["a", "a", "b"]
+    # an identical plan replays the identical sequence (seeded rng)
+    probs = []
+    for _ in range(2):
+        p = faults.FaultPlan({"a": faults.Fault("error", times=None,
+                                                prob=0.5)}, seed=3)
+        hits = 0
+        for _ in range(20):
+            try:
+                p.fire("a")
+            except OSError:
+                hits += 1
+        probs.append(hits)
+    assert probs[0] == probs[1] and 0 < probs[0] < 20
+
+
+def test_mangle_flip_and_truncate():
+    data = bytes(range(200))
+    flipped = faults.FaultPlan(
+        {"s": faults.Fault("torn", nbytes=8)}).mangle("s", data)
+    assert len(flipped) == len(data) and flipped != data
+    cut = faults.FaultPlan(
+        {"s": faults.Fault("torn", torn="truncate", nbytes=50)}
+    ).mangle("s", data)
+    assert cut == data[:150]
+
+
+# --------------------------------------------------------------------------
+# transient IO: the async writer's retry budget
+# --------------------------------------------------------------------------
+
+def test_transient_io_absorbed_by_writer_retries(tmp_path):
+    """Two transient OSErrors at ckpt.write, retry budget of two: the
+    save commits as if nothing happened, and the retries are counted."""
+    obs.enable()
+    tree = {"w": jnp.asarray(_field())}
+    mgr = CheckpointManager(str(tmp_path), async_write=True, log=None,
+                            write_retries=2, write_backoff_s=0.001)
+    with faults.injected(faults.FaultPlan(
+            {"ckpt.write": faults.Fault("error", times=2)})) as plan:
+        mgr.save(tree, 1)
+        mgr.wait()
+        assert len(plan.fired) == 2
+    assert mgr.latest_step() == 1
+    assert mgr.committed_steps == [1] and mgr.failed_steps == []
+    assert _counters().get("ckpt.write_retries") == 2
+    res = CheckpointManager(str(tmp_path), log=None).restore(
+        {"w": jnp.zeros((48, 32), jnp.float32)})
+    assert np.array_equal(np.asarray(res.tree["w"]), _field())
+
+
+def test_transient_io_exhausting_retries_fails_loudly(tmp_path):
+    tree = {"w": jnp.asarray(_field())}
+    mgr = CheckpointManager(str(tmp_path), async_write=True, log=None,
+                            write_retries=1, write_backoff_s=0.001)
+    with faults.injected(faults.FaultPlan(
+            {"ckpt.write": faults.Fault("error", times=None)})):
+        mgr.save(tree, 1)
+        with pytest.raises(AsyncWriteError, match="step 1"):
+            mgr.wait()
+    assert mgr.committed_steps == []
+    assert [s for s, _ in mgr.failed_steps] == [1, 1]   # initial + retry run
+    assert mgr.latest_step() is None                    # nothing half-written
+
+
+def test_writer_retry_reruns_fn_from_scratch():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    w = AsyncWriter(retries=2, backoff_s=0.001)
+    w.submit(flaky)
+    assert w.wait() == "ok" and len(calls) == 3
+
+
+# --------------------------------------------------------------------------
+# torn blob: corruption between memory and disk
+# --------------------------------------------------------------------------
+
+def test_torn_blob_detected_on_restore_and_fallback(tmp_path):
+    """Bytes torn on their way to disk while the manifest keeps the hash
+    of the intended bytes: restore detects the mismatch and falls back to
+    the intact previous checkpoint."""
+    tree = {"w": jnp.asarray(_field())}
+    mgr = CheckpointManager(str(tmp_path), async_write=False, log=None)
+    mgr.save(tree, 1)                                   # intact
+    with faults.injected(faults.FaultPlan(
+            {"ckpt.blob": faults.Fault("torn", nbytes=16)})) as plan:
+        mgr.save(tree, 2)                               # torn on disk
+        assert len(plan.fired) == 1
+    logs = []
+    res = CheckpointManager(str(tmp_path), log=logs.append).restore(
+        {"w": jnp.zeros((48, 32), jnp.float32)})
+    assert res.step == 1
+    assert any("skipping step 2" in ln and "hash mismatch" in ln
+               for ln in logs), logs
+
+
+def test_torn_blob_truncation_detected(tmp_path):
+    tree = {"w": jnp.asarray(_field()), "n": jnp.int32(1)}
+    mgr = CheckpointManager(str(tmp_path), async_write=False, log=None)
+    with faults.injected(faults.FaultPlan(
+            {"ckpt.blob": faults.Fault("torn", torn="truncate",
+                                       nbytes=64)})):
+        mgr.save(tree, 1)
+    logs = []
+    assert CheckpointManager(str(tmp_path), log=logs.append).restore(
+        {"w": jnp.zeros((48, 32), jnp.float32), "n": jnp.int32(0)}) is None
+    assert logs, "truncation must be a logged skip, not silence"
+
+
+# --------------------------------------------------------------------------
+# crash windows (single-controller path)
+# --------------------------------------------------------------------------
+
+def test_crash_before_manifest_keeps_previous_committed(tmp_path):
+    """Death between blobs and manifest: the torn attempt holds no commit
+    marker and the previous checkpoint restores untouched."""
+    tree = {"w": jnp.asarray(_field())}
+    mgr = CheckpointManager(str(tmp_path), async_write=False, log=None)
+    mgr.save(tree, 1)
+    with faults.injected(faults.FaultPlan(
+            {"ckpt.before_manifest": faults.Fault("crash")})):
+        with pytest.raises(faults.InjectedCrash):
+            mgr.save(tree, 2)
+    assert not (tmp_path / "step_00000002").exists()
+    assert (tmp_path / "step_00000002.tmp").is_dir()
+    assert not (tmp_path / "step_00000002.tmp" / "manifest.json").exists()
+    res = CheckpointManager(str(tmp_path), log=None).restore(
+        {"w": jnp.zeros((48, 32), jnp.float32)})
+    assert res.step == 1
+    assert np.array_equal(np.asarray(res.tree["w"]), _field())
+
+
+# --------------------------------------------------------------------------
+# the train loop's checkpoint ledger (phantom-checkpoint bugfix)
+# --------------------------------------------------------------------------
+
+def _toy_state():
+    return TrainState(jnp.int32(0),
+                      {"w": jnp.zeros((64, 32), jnp.float32)}, None, None)
+
+
+def _toy_step(state, batch):
+    return (state._replace(step=state.step + 1,
+                           params={"w": state.params["w"] + 1.0}),
+            {"loss": jnp.float32(0.0)})
+
+
+def _batches():
+    while True:
+        yield {"x": jnp.zeros(())}
+
+
+def test_failed_async_write_never_leaves_phantom_checkpoint(tmp_path):
+    """The step-4 background write dies; report.checkpoints must list
+    only what actually committed and report.failed_checkpoints the rest
+    (before the reconcile fix, 4 appeared as a committed checkpoint)."""
+    mgr = CheckpointManager(str(tmp_path), async_write=True, log=None,
+                            write_retries=0)
+    plan = faults.FaultPlan({"ckpt.write": faults.Fault("error", at=4)})
+    with faults.injected(plan):
+        state, rep = train_loop(_toy_state(), _toy_step, _batches(),
+                                num_steps=4, ckpt_manager=mgr,
+                                ckpt_every=2, log=lambda *_: None)
+    assert rep.checkpoints == [2]
+    assert rep.failed_checkpoints == [4]
+    assert mgr.latest_step() == 2
+    assert rep.steps_run == 4                   # training itself unharmed
+
+
+def test_failed_write_surfacing_at_next_save_is_resubmitted(tmp_path):
+    """A background failure surfaces at the NEXT save's barrier; the loop
+    logs it and resubmits the new step on the freed slot, so one bad
+    write costs one checkpoint, not two."""
+    mgr = CheckpointManager(str(tmp_path), async_write=True, log=None,
+                            write_retries=0)
+    with faults.injected(faults.FaultPlan(
+            {"ckpt.write": faults.Fault("error", at=2)})):
+        state, rep = train_loop(_toy_state(), _toy_step, _batches(),
+                                num_steps=6, ckpt_manager=mgr,
+                                ckpt_every=2, log=lambda *_: None)
+    assert rep.checkpoints == [4, 6]
+    assert rep.failed_checkpoints == [2]
+    assert mgr.latest_step() == 6
+
+
+def test_prune_skips_the_writer_held_step(tmp_path):
+    from repro.ckpt.manager import prune
+    for s in (1, 2, 3, 4):
+        os.makedirs(tmp_path / f"step_{s:08d}")
+    prune(str(tmp_path), keep=1, skip={2})
+    left = sorted(p.name for p in tmp_path.iterdir())
+    assert left == ["step_00000002", "step_00000004"]
+
+
+# --------------------------------------------------------------------------
+# device loss: mid-run elastic recovery
+# --------------------------------------------------------------------------
+
+def test_device_loss_recovery_rolls_back_and_continues(tmp_path):
+    """DeviceLoss at step 3: the loop rolls back to the committed step-2
+    checkpoint, re-jits, and finishes all 6 steps; params prove the
+    rollback really happened (w counts steps since restore)."""
+    obs.enable()
+    mgr = CheckpointManager(str(tmp_path), async_write=True, log=None)
+    plan = faults.FaultPlan(
+        {"loop.step": faults.Fault("device_loss", at=3)})
+    with faults.injected(plan):
+        state, rep = train_loop(_toy_state(), _toy_step, _batches(),
+                                num_steps=6, ckpt_manager=mgr,
+                                ckpt_every=2, max_recoveries=1,
+                                log=lambda *_: None)
+    assert len(rep.recoveries) == 1
+    ev = rep.recoveries[0]
+    assert ev["step"] == 3 and ev["restored_from"] == 2
+    assert ev["recovery_s"] > 0
+    assert int(state.step) == 6
+    assert float(state.params["w"][0, 0]) == 6.0        # 2 kept + 4 replayed
+    assert rep.checkpoints == [2, 4, 6]
+    assert _counters().get("loop.recoveries") == 1
+
+
+def test_device_loss_without_recovery_budget_reraises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False, log=None)
+    with faults.injected(faults.FaultPlan(
+            {"loop.step": faults.Fault("device_loss", at=1)})):
+        with pytest.raises(DeviceLoss):
+            train_loop(_toy_state(), _toy_step, _batches(), num_steps=4,
+                       ckpt_manager=mgr, ckpt_every=2, max_recoveries=0,
+                       log=lambda *_: None)
+
+
+def test_device_loss_before_any_checkpoint_fails_loudly(tmp_path):
+    """Nothing committed to roll back to: recovery must give up with the
+    ORIGINAL DeviceLoss, not loop forever or restart from garbage."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False, log=None)
+    with faults.injected(faults.FaultPlan(
+            {"loop.step": faults.Fault("device_loss", at=1)})):
+        with pytest.raises(DeviceLoss):
+            train_loop(_toy_state(), _toy_step, _batches(), num_steps=4,
+                       ckpt_manager=mgr, ckpt_every=10, max_recoveries=2,
+                       log=lambda *_: None)
+
+
+def test_device_loss_budget_bounds_recovery_attempts(tmp_path):
+    """Two losses, budget of one: the first recovers, the second
+    re-raises — graceful degradation never becomes an infinite loop."""
+    mgr = CheckpointManager(str(tmp_path), async_write=True, log=None)
+    with faults.injected(faults.FaultPlan(
+            {"loop.step": faults.Fault("device_loss", at=3, times=2)})):
+        with pytest.raises(DeviceLoss):
+            train_loop(_toy_state(), _toy_step, _batches(), num_steps=6,
+                       ckpt_manager=mgr, ckpt_every=2, max_recoveries=1,
+                       log=lambda *_: None)
+
+
+# --------------------------------------------------------------------------
+# end to end: 8 fake devices, toposzp checkpoints, device loss mid-run
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_device_loss_mid_run_recovers_onto_rebuilt_mesh():
+    """Train on a 4x2 mesh with toposzp checkpoints; lose half the world
+    at step 3; the loop rolls back to the committed step-2 checkpoint,
+    rebuilds a 2x2 mesh from the 4 survivors, reshards, re-jits via
+    rebuild_step, and finishes — with the restored toposzp leaf holding
+    the 2*eb bound and zero FP/FT critical points per saved shard."""
+    py = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import faults
+        from repro.ckpt import CheckpointManager
+        from repro.core.critical_points import REGULAR, classify
+        from repro.dist.elastic import mesh_shape_dict, rebuild_mesh
+        from repro.train import TrainState, train_loop
+
+        mesh1 = rebuild_mesh(jax.devices(), model_parallel=2)
+        assert mesh_shape_dict(mesh1) == {'data': 4, 'model': 2}
+        rng = np.random.default_rng(0)
+        ny, nx = 128, 96
+        y, x = np.meshgrid(np.linspace(0, 4*np.pi, ny),
+                           np.linspace(0, 4*np.pi, nx), indexing='ij')
+        m_host = (np.sin(x)*np.cos(y)
+                  + 0.1*rng.standard_normal((ny, nx))).astype(np.float32)
+
+        params = {'m': jax.device_put(jnp.asarray(m_host),
+                                      NamedSharding(mesh1, P('data', None))),
+                  'n': jnp.zeros((8,), jnp.float32)}
+        state = TrainState(jnp.int32(0), params, None, None)
+
+        def step_fn(state, batch):
+            # touches 'n' only: 'm' must survive save->loss->restore
+            return state._replace(
+                step=state.step + 1,
+                params={'m': state.params['m'],
+                        'n': state.params['n'] + 1.0}), \\
+                {'loss': jnp.float32(0.0)}
+
+        def batches():
+            while True:
+                yield {'x': jnp.zeros(())}
+
+        def rebuild_step(new_mesh):
+            return step_fn            # pure jit step: mesh-independent
+
+        eb = 1e-3
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d, mode='toposzp', eb=eb, async_write=True,
+                                log=None, min_compress_size=1024)
+        survivors = jax.devices()[:4]
+        plan = faults.FaultPlan(
+            {'loop.step': faults.Fault('device_loss', at=3, keep=4)})
+        with faults.injected(plan):
+            state2, rep = train_loop(state, step_fn, batches(),
+                                     num_steps=6, ckpt_manager=mgr,
+                                     ckpt_every=2, mesh=mesh1,
+                                     model_parallel=2, max_recoveries=1,
+                                     rebuild_step=rebuild_step,
+                                     log=lambda *_: None)
+        assert len(rep.recoveries) == 1, rep.recoveries
+        ev = rep.recoveries[0]
+        assert ev['step'] == 3 and ev['restored_from'] == 2
+        assert ev['mesh'] == {'data': 2, 'model': 2}, ev
+        assert ev['devices'] == 4
+        assert rep.checkpoints == [2, 4, 6], rep.checkpoints
+        assert int(state2.step) == 6
+        # resharded onto the rebuilt 2x2 mesh
+        assert state2.params['m'].sharding.mesh.devices.size == 4
+
+        # toposzp contract on the leaf that crossed save -> loss -> restore:
+        # relaxed 2*eb bound and zero FP/FT per saved shard (4 row blocks)
+        out = np.asarray(state2.params['m'])
+        assert np.abs(out - m_host).max() <= 2*eb*(1 + 1e-4)
+        for rs in range(4):
+            blk = slice(rs*ny//4, (rs+1)*ny//4)
+            lo = np.asarray(classify(jnp.asarray(m_host[blk])))
+            lr = np.asarray(classify(jnp.asarray(out[blk])))
+            viol = (lr != REGULAR) & (lr != lo)
+            assert not viol.any(), (rs, int(viol.sum()))
+        print('FAULT-RECOVERY-OK')
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", py], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "FAULT-RECOVERY-OK" in out.stdout
